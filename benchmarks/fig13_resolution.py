@@ -1,0 +1,45 @@
+"""Paper Fig. 13: single-device performance vs horizontal resolution.
+
+Measures wall time per full 3D internal step on CPU for increasing mesh
+sizes, reporting iteration time and DG-node throughput.  The paper's claim
+reproduced in structure: near-linear scaling at large sizes with a constant
+floor at small sizes (dispatch/latency-dominated — the CPU analogue of the
+paper's kernel-launch floor).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry, mesh2d, stepper
+from repro.core.extrusion import VGrid
+
+from .common import row, time_fn
+
+NL = 8
+CASES = [(4, 4), (8, 8), (16, 16), (32, 32), (48, 48)]
+
+
+def run():
+    for nx, ny in CASES:
+        m = mesh2d.rect_mesh(nx, ny, 10e3, 10e3, jitter=0.15, seed=1)
+        geom = geometry.geom2d_from_mesh(m)
+        b = jnp.full((3, m.nt), 30.0)
+        vg = VGrid(b=b, nl=NL)
+        cfg = stepper.OceanConfig(nl=NL, dt=20.0, m_2d=10, use_gls=True)
+        st = stepper.init_state(geom, vg)
+        eta = 0.02 * jnp.cos(jnp.pi * geom.node_x / 10e3)
+        st = stepper.OceanState(
+            ext=stepper.State2D(eta, st.ext.qx, st.ext.qy), ux=st.ux,
+            uy=st.uy, T=st.T, S=st.S, turb_k=st.turb_k,
+            turb_eps=st.turb_eps, nu_t=st.nu_t, kappa_t=st.kappa_t,
+            time=st.time)
+        step = jax.jit(lambda s: stepper.step(geom, vg, cfg, s))
+        t = time_fn(step, st, warmup=1, iters=3)
+        nodes = m.nt * NL * 6
+        row(f"fig13_resolution_nt{m.nt}", t * 1e6,
+            f"dg_nodes={nodes};nodes_per_s={nodes / t:.3e}")
+
+
+if __name__ == "__main__":
+    run()

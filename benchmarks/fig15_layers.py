@@ -1,0 +1,43 @@
+"""Paper Fig. 15: non-linear scaling with the number of vertical layers.
+
+Two views:
+  * measured CPU time per step per layer for nl in {1..32} (fixed 2D mesh) —
+    the per-layer cost flattens once the column work amortises the 2D mode,
+    mirroring the paper's curve shape;
+  * the TPU cell-layout alignment model: the paper's dips at 16/32/64 layers
+    come from block-size divisibility; our lane-layout analogue is sublane
+    padding of the (nl*6, 128) cell tiles — occupancy = (nl*6)/ceil8(nl*6) —
+    reported as the modelled efficiency factor per layer count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry, mesh2d, stepper
+from repro.core.extrusion import VGrid
+
+from .common import row, time_fn
+
+LAYERS = [1, 2, 4, 8, 12, 16, 24, 32]
+
+
+def run():
+    m = mesh2d.rect_mesh(12, 12, 10e3, 10e3, jitter=0.15, seed=2)
+    geom = geometry.geom2d_from_mesh(m)
+    b = jnp.full((3, m.nt), 30.0)
+    for nl in LAYERS:
+        vg = VGrid(b=b, nl=nl)
+        cfg = stepper.OceanConfig(nl=nl, dt=20.0, m_2d=10, use_gls=True)
+        st = stepper.init_state(geom, vg)
+        step = jax.jit(lambda s, v=vg, c=cfg: stepper.step(geom, v, c, s))
+        t = time_fn(step, st, warmup=1, iters=3)
+        rows = nl * 6
+        occupancy = rows / ((rows + 7) // 8 * 8)
+        row(f"fig15_layers_nl{nl}", t * 1e6,
+            f"us_per_layer={t * 1e6 / nl:.1f};"
+            f"tpu_sublane_occupancy={occupancy:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Paper Fig. 14 / §4.1: per-kernel utilisation.
+
+For each Pallas kernel (ref path on CPU): measured CPU wall time, the
+bytes/flops it moves, and the *modelled* TPU v5e roofline fraction
+(arithmetic intensity vs the 240 FLOP/byte ridge).  The paper reports
+80 % of peak BW for memory-bound kernels and ~60 % of peak compute for
+compute-bound ones; the kernels' modelled positions on the roofline are the
+TPU-side expectation (validated in interpret mode for correctness).
+
+Also measures the SoA<->cell transpose (paper: "nearly achieves peak memory
+bandwidth") and the fused-2D-mode dispatch-latency experiment (paper §3.3 /
+beyond-paper opt #1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dg2d, geometry, mesh2d
+from repro.kernels import ref as kref
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS_BF16
+
+from .common import row, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    nl, C = 32, 128 * 64            # 8192 columns
+
+    # tridiagonal solve: 8 reads+writes per row -> memory bound
+    dl, du = [jnp.asarray(rng.normal(size=(nl, C)).astype(np.float32)) * 0.3
+              for _ in range(2)]
+    d = 2.0 + jnp.abs(jnp.asarray(rng.normal(size=(nl, C)).astype(np.float32)))
+    bb = jnp.asarray(rng.normal(size=(nl, C)).astype(np.float32))
+    f = jax.jit(kref.tridiag)
+    t = time_fn(f, dl, d, du, bb)
+    bytes_ = 6 * nl * C * 4
+    row("kernel_tridiag", t * 1e6,
+        f"cpu_GBps={bytes_ / t / 1e9:.2f};"
+        f"tpu_roofline=memory;ai={8 * nl * C / bytes_:.2f}")
+
+    # matrix-free r solve
+    F = jnp.asarray(rng.normal(size=(nl * 6, C)).astype(np.float32))
+    area = jnp.abs(jnp.asarray(rng.normal(size=(1, C)).astype(np.float32))) + .5
+    rs = jnp.asarray(rng.normal(size=(3, C)).astype(np.float32))
+    f = jax.jit(kref.solve_r_cell)
+    t = time_fn(f, F, area, rs)
+    bytes_ = 2 * nl * 6 * C * 4
+    row("kernel_matrix_free_r", t * 1e6,
+        f"cpu_GBps={bytes_ / t / 1e9:.2f};tpu_roofline=memory")
+
+    # block-tridiagonal solve: ~6^3*2*nl flops/col vs 3*36*nl*4 bytes/col
+    mk = lambda: jnp.asarray(0.1 * rng.normal(size=(nl, 6, 6, C))
+                             ).astype(jnp.float32)
+    lo = mk().at[0].set(0.0)
+    up = mk().at[-1].set(0.0)
+    dg = mk() + 2.0 * jnp.eye(6)[None, :, :, None]
+    b2 = jnp.asarray(rng.normal(size=(nl, 6, 2, C)).astype(np.float32))
+    f = jax.jit(kref.block_thomas_cell)
+    t = time_fn(f, lo, dg, up, b2)
+    flops = 2 * (6 ** 3) * 2 * nl * C
+    bytes_ = (3 * 36 + 12 * 2) * nl * C * 4
+    ai = flops / bytes_
+    ridge = PEAK_FLOPS_BF16 / HBM_BW
+    bound = "compute" if ai > ridge else "memory"
+    row("kernel_block_thomas", t * 1e6,
+        f"cpu_GFLOPs={flops / t / 1e9:.1f};ai={ai:.1f};tpu_roofline={bound}")
+
+    # SoA<->cell transpose: pure streaming copy
+    x = jnp.asarray(rng.normal(size=(nl, 6, C)).astype(np.float32))
+    f = jax.jit(lambda x: kref.soa_to_cell(x))
+    t = time_fn(f, x)
+    bytes_ = 2 * nl * 6 * C * 4
+    row("kernel_cell_transpose", t * 1e6,
+        f"cpu_GBps={bytes_ / t / 1e9:.2f};"
+        f"tpu_expectation=peak_bw (paper §2.1.2)")
+
+    # 2D-mode dispatch latency: fused m-substep scan vs per-substep calls
+    m = mesh2d.rect_mesh(12, 10, 5e3, 4e3, jitter=0.15, seed=4)
+    geom = geometry.geom2d_from_mesh(m)
+    b3 = jnp.full((3, m.nt), 20.0)
+    st = dg2d.State2D(*[jnp.zeros((3, m.nt))] * 3)
+    msteps = 20
+    dt = dg2d.cfl_dt(geom, b3) * msteps
+
+    fused = jax.jit(lambda s: dg2d.run_external(geom, b3, s, dt, msteps))
+    t_fused = time_fn(fused, st)
+    single = jax.jit(lambda s: dg2d.ssprk3_step(
+        lambda x: dg2d.external_rhs(geom, b3, x), s, dt / msteps))
+
+    def unfused(s):
+        for _ in range(msteps):
+            s = single(s)
+        return s
+    t_unfused = time_fn(unfused, st)
+    row("fused_2d_burst_vs_calls", t_fused * 1e6,
+        f"unfused_us={t_unfused * 1e6:.1f};"
+        f"fusion_speedup={t_unfused / t_fused:.2f} (paper §3.3 latency wall)")
+
+
+if __name__ == "__main__":
+    run()

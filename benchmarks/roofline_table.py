@@ -1,0 +1,59 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = "experiments/dryrun_v2"
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = {}
+    if not os.path.isdir(dryrun_dir):
+        return out
+    for mesh_name in sorted(os.listdir(dryrun_dir)):
+        mdir = os.path.join(dryrun_dir, mesh_name)
+        if not os.path.isdir(mdir):
+            continue
+        recs = []
+        for fn in sorted(os.listdir(mdir)):
+            if fn.endswith(".json"):
+                with open(os.path.join(mdir, fn)) as f:
+                    recs.append(json.load(f))
+        out[mesh_name] = recs
+    return out
+
+
+def fmt_table(recs: List[dict]) -> str:
+    hdr = ("| arch | shape | mem/dev GiB | compute ms | memory ms | "
+           "collective ms | dominant | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_per_device'] / 2**30:.2f} "
+            f"| {ro['compute_s'] * 1e3:.1f} | {ro['memory_s'] * 1e3:.1f} "
+            f"| {ro['collective_s'] * 1e3:.1f} | {ro['dominant']} "
+            f"| {ro['useful_ratio']:.2f} | {ro['roofline_fraction']:.4f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run():
+    data = load_records()
+    for mesh_name, recs in data.items():
+        print(f"roofline_table_{mesh_name},{len(recs)},cells")
+    # write markdown fragment for EXPERIMENTS.md
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline_tables.md", "w") as f:
+        for mesh_name, recs in data.items():
+            f.write(f"### {mesh_name}\n\n")
+            f.write(fmt_table(recs))
+            f.write("\n")
+    print("roofline_tables_written,0,experiments/roofline_tables.md")
+
+
+if __name__ == "__main__":
+    run()

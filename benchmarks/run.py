@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper-figure analogues measured
+on CPU + TPU roofline models; see each module's docstring for the mapping).
+
+  fig13_resolution — paper Fig. 13 (perf vs horizontal resolution)
+  fig15_layers     — paper Fig. 15 (layer-count scaling / occupancy)
+  fig16_scaling    — paper Figs. 16-18 (multi-device scaling, Amdahl)
+  kernel_util      — paper Fig. 14 / §4.1 (per-kernel utilisation) + the
+                     §3.3 dispatch-latency experiment
+  roofline_table   — the 40-cell dry-run roofline table (EXPERIMENTS.md)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the multi-process scaling benchmark")
+    args = ap.parse_args()
+
+    from . import (fig13_resolution, fig15_layers, fig16_scaling,
+                   kernel_util, roofline_table)
+    benches = {
+        "kernel_util": kernel_util.run,
+        "fig13_resolution": fig13_resolution.run,
+        "fig15_layers": fig15_layers.run,
+        "fig16_scaling": fig16_scaling.run,
+        "roofline_table": roofline_table.run,
+    }
+    if args.only:
+        names = args.only.split(",")
+    else:
+        names = list(benches)
+        if args.skip_slow:
+            names.remove("fig16_scaling")
+    print("name,us_per_call,derived")
+    ok = True
+    for n in names:
+        try:
+            benches[n]()
+        except Exception:
+            traceback.print_exc()
+            print(f"{n},0,FAILED")
+            ok = False
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end LM training driver: the full production stack on one host.
+
+Trains a reduced-width OLMo-family model (default ~20M params; --full_100m
+for ~100M) on a synthetic token stream using the real runtime: sharded
+AdamW, remat, async checkpointing, fault-tolerant runner (resume/retry/
+preemption), deterministic data. Loss must decrease — the e2e validation of
+the training substrate.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --full_100m
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.pipeline import TokenDataset
+from repro.models.model import Model, count_params
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import RunnerConfig, TrainRunner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full_100m", action="store_true")
+    ap.add_argument("--ckpt_dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    base = get_arch("olmo-1b")
+    if args.full_100m:
+        arch = dataclasses.replace(base, n_layers=8, d_model=768,
+                                   n_heads=12, n_kv=12, d_ff=3072,
+                                   vocab=32768, remat=False)
+    else:
+        arch = dataclasses.replace(base, n_layers=4, d_model=384,
+                                   n_heads=6, n_kv=6, d_ff=1536,
+                                   vocab=8192, remat=False)
+    model = Model(arch, dtype=jnp.float32)
+    total, _ = count_params(model)
+    print(f"model: {arch.n_layers}L d={arch.d_model} "
+          f"({total / 1e6:.1f}M params)")
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, weight_decay=0.01)
+    opt = adamw.init(params)
+    ds = TokenDataset(vocab=arch.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+
+    @jax.jit
+    def train_step(state, batch):
+        params, opt = state
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt = adamw.update(grads, opt, params, opt_cfg)
+        return (params, opt), {"loss": loss}
+
+    losses = []
+
+    def step_fn(state, batch):
+        state, metrics = train_step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if len(losses) % 20 == 0:
+            print(f"step {len(losses):4d} loss {losses[-1]:.4f} "
+                  f"(avg20 {sum(losses[-20:]) / 20:.4f})", flush=True)
+        return state, metrics
+
+    runner = TrainRunner(
+        step_fn, ds,
+        RunnerConfig(checkpoint_dir=args.ckpt_dir, checkpoint_every=50))
+    t0 = time.time()
+    state = runner.run((params, opt), n_steps=args.steps, resume=True)
+    wall = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / max(wall, 1e-9)
+    print(f"\n{args.steps} steps in {wall:.1f}s ({tok_s:.0f} tok/s); "
+          f"runner stats: {runner.stats}")
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"loss: first10 {first:.4f} -> last10 {last:.4f}")
+    assert last < first, "loss did not decrease"
+    print("OK: loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

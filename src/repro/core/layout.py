@@ -1,0 +1,78 @@
+"""SoA <-> cell layout transforms (paper §2.1).
+
+The paper groups 128 prism columns into a *cell* and stores a scalar field as
+a (rows = 6*n_layers, cols = 128) matrix per cell so that 128 CUDA threads
+solving 128 independent column systems get perfectly coalesced access.
+
+On TPU this layout is even more natural: an array shaped
+    (n_cells, rows, 128)
+puts the 128 columns of a cell in the **lane** dimension — every row load is a
+native (8,128)-tile access and a sequential sweep over rows (layers) performs
+128 independent column solves per vector op.  `CELL` (=128) matches both the
+paper's cell width and the TPU lane count; this is the central hardware
+adaptation of the paper's idea (DESIGN.md §2).
+
+Row ordering within a cell matches the paper's Figure 5:
+cell -> layer -> node -> column, i.e. row = layer*6 + node.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CELL = 128
+
+
+def num_cells(nt: int, cell: int = CELL) -> int:
+    return (nt + cell - 1) // cell
+
+
+def pad_nt(x: jax.Array, cell: int = CELL) -> jax.Array:
+    """Pad the minor (triangle/column) axis to a multiple of `cell`."""
+    nt = x.shape[-1]
+    pad = (-nt) % cell
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
+
+
+def soa_to_cell(x: jax.Array, cell: int = CELL) -> jax.Array:
+    """(..., nl, nodes, nt) -> (..., n_cells, nl*nodes, cell).
+
+    Works for 3D fields (nl, 6, nt) and 2D per-column data (1, 3, nt) alike.
+    Pads nt up to a multiple of `cell`.
+    """
+    x = pad_nt(x, cell)
+    *lead, nl, nn, nt = x.shape
+    nc = nt // cell
+    x = x.reshape(*lead, nl, nn, nc, cell)
+    # -> (..., nc, nl, nn, cell): row = layer*nn + node  (paper Fig. 5)
+    x = jnp.moveaxis(x, -2, -4)
+    return x.reshape(*lead, nc, nl * nn, cell)
+
+
+def cell_to_soa(x: jax.Array, nl: int, nn: int, nt: int,
+                cell: int = CELL) -> jax.Array:
+    """Inverse of soa_to_cell; slices padding back off to `nt`."""
+    *lead, nc, rows, c = x.shape
+    assert rows == nl * nn and c == cell
+    x = x.reshape(*lead, nc, nl, nn, cell)
+    x = jnp.moveaxis(x, -4, -2)            # (..., nl, nn, nc, cell)
+    x = x.reshape(*lead, nl, nn, nc * cell)
+    return x[..., :nt]
+
+
+def soa2d_to_cell(x: jax.Array, cell: int = CELL) -> jax.Array:
+    """2D nodal field (..., 3, nt) -> (..., nc, 3, cell)."""
+    x = pad_nt(x, cell)
+    *lead, nn, nt = x.shape
+    nc = nt // cell
+    x = x.reshape(*lead, nn, nc, cell)
+    return jnp.moveaxis(x, -2, -3)
+
+
+def cell2d_to_soa(x: jax.Array, nt: int, cell: int = CELL) -> jax.Array:
+    *lead, nc, nn, c = x.shape
+    x = jnp.moveaxis(x, -3, -2).reshape(*lead, nn, nc * c)
+    return x[..., :nt]

@@ -1,0 +1,317 @@
+"""Split-IMEX RK2 time stepper coupling the internal (3D) and external (2D)
+modes — the paper's §1.2/§2 scheme (Ishimwe et al. 2023/2025), with the five
+components of Figure 2 per stage:
+
+  1. 3D horizontal momentum flux prediction (always explicit) -> F_3D->2D
+  2. external mode burst (m sub-steps of SSPRK3)               -> eta, F2D, Qbar
+  3. turbulence update (GLS)                                   -> nu_v, kappa_v
+  4. momentum update with the 2D correction (vertically implicit on stage 1)
+  5. tracer update (same machinery, T & S solved together)
+
+Stage 1 advances t -> t + dt/2 vertically-implicitly; stage 2 re-integrates
+t -> t + dt with midpoint fluxes, vertically explicit (paper Fig. 2; for
+vertically explicit steps the turbulence update is performed last).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import dg2d, dg3d, eos, turbulence, vertical
+from . import geometry as G
+from .dg2d import Forcing2D, State2D
+from .extrusion import (VGrid, expand2d, layer_geometry, mesh_velocity,
+                        node_z, vsum_dofs)
+
+RHO0 = 1025.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OceanConfig:
+    """Static model configuration (plain Python; closed over by jit)."""
+    nl: int = 8                  # vertical layers
+    dt: float = 60.0             # internal (baroclinic) step [s]
+    m_2d: int = 20               # external sub-steps per internal step
+    coriolis_f: float = 0.0
+    cd_bottom: float = 2.5e-3
+    cs_smag: float = 0.1
+    eos_kind: str = "linear"
+    h_min: float = 0.05
+    implicit_stage1: bool = True
+    exact_consistency: bool = True
+    nu_v_bg: float = 1e-4        # background vertical viscosity
+    kappa_v_bg: float = 1e-5
+    use_gls: bool = True
+    halo_exchange_period: int = 0  # 0: per 2D RK stage; j>0: every j substeps
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OceanState:
+    ext: State2D                     # 2D external state (eta, Qx, Qy)
+    ux: jax.Array                    # (nl, 6, nt)
+    uy: jax.Array
+    T: jax.Array                     # (nl, 6, nt)
+    S: jax.Array
+    turb_k: jax.Array                # (nl, nt)
+    turb_eps: jax.Array
+    nu_t: jax.Array                  # (nl, nt)
+    kappa_t: jax.Array
+    time: jax.Array                  # scalar
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Forcing3D:
+    forcing2d: Forcing2D = Forcing2D()
+    tau_x: Optional[jax.Array] = None    # (3, nt) wind stress / rho0 [m^2/s^2]
+    tau_y: Optional[jax.Array] = None
+    T_open: Optional[jax.Array] = None   # (nl, 6, nt) open-boundary tracer
+    S_open: Optional[jax.Array] = None
+
+
+def init_state(geom: G.Geom2D, vg: VGrid, T0: float = 10.0, S0: float = 35.0,
+               dtype=None) -> OceanState:
+    if dtype is None:      # follow the ambient default (f64 under x64 tests)
+        dtype = jnp.zeros(()).dtype
+    nt = geom.nt
+    nl = vg.nl
+    z2 = jnp.zeros((3, nt), dtype)
+    z3 = jnp.zeros((nl, 6, nt), dtype)
+    ts = turbulence.init_turbulence(nl, nt, dtype)
+    return OceanState(
+        ext=State2D(z2, z2, z2), ux=z3, uy=z3,
+        T=jnp.full((nl, 6, nt), T0, dtype), S=jnp.full((nl, 6, nt), S0, dtype),
+        turb_k=ts.k, turb_eps=ts.eps, nu_t=ts.nu_t, kappa_t=ts.kappa_t,
+        time=jnp.zeros((), dtype))
+
+
+class StageOut(NamedTuple):
+    ext: State2D
+    ux: jax.Array
+    uy: jax.Array
+    T: jax.Array
+    S: jax.Array
+    turb: turbulence.TurbState
+    r: jax.Array         # internal pressure gradient (diagnostics)
+    w_tilde: jax.Array   # vertical velocity (diagnostics)
+
+
+def _momentum_extra(geom, vge, cfg, r, ux_e, uy_e):
+    """Coriolis - f ez x u and internal pressure -M r/rho0 (raw assembled)."""
+    fx = cfg.coriolis_f * vertical.mass_apply3d(geom, vge.jz, uy_e) \
+        - vertical.mass_apply3d(geom, vge.jz, r[0]) / RHO0
+    fy = -cfg.coriolis_f * vertical.mass_apply3d(geom, vge.jz, ux_e) \
+        - vertical.mass_apply3d(geom, vge.jz, r[1]) / RHO0
+    return jnp.stack([fx, fy])
+
+
+def _bottom_drag_coeff(cfg, ux_e, uy_e):
+    """Linearised quadratic drag Cd |u_bot| at the floor nodes: (3, nt)."""
+    ub = ux_e[-1, 3:6, :]
+    vb = uy_e[-1, 3:6, :]
+    return cfg.cd_bottom * jnp.sqrt(ub ** 2 + vb ** 2 + 1e-12)
+
+
+def _wind_rhs(geom, tau, nl, nt, dtype):
+    """Surface Neumann wind-stress contribution to the vertical-solve RHS."""
+    out = jnp.zeros((nl, 6, nt), dtype)
+    if tau is None:
+        return out
+    return out.at[0, 0:3, :].set(G.vol_scatter(geom, G.vol_interp(tau)))
+
+
+def _pressure_dbar(vg: VGrid, vge) -> jax.Array:
+    """Approximate pressure (dbar ~ m depth) at prism nodes for the EOS."""
+    z = node_z(vg, vge)               # (nl, 6, nt)
+    eta6 = jnp.concatenate([vge.eta, vge.eta], axis=-2)   # (6, nt)
+    return jnp.maximum(eta6 - z, 0.0)
+
+
+def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
+          ux_e: jax.Array, uy_e: jax.Array, T_e: jax.Array, S_e: jax.Array,
+          eta_e: jax.Array, turb0: turbulence.TurbState,
+          dtau: float, m_sub: int, implicit: bool,
+          forcing: Forcing3D,
+          turb_base: Optional[turbulence.TurbState] = None,
+          exchange2d=None, exchange_field=None) -> StageOut:
+    """One IMEX stage: evaluate fluxes at (ux_e, ..., eta_e), advance the
+    state *from st0* over dtau with m_sub external sub-steps.
+
+    turb0 provides the mixing coefficients; turb_base (default turb0) is the
+    state the turbulence model is advanced *from* (stage 2 restarts from t0
+    like the rest of the state, while using midpoint coefficients)."""
+    if turb_base is None:
+        turb_base = turb0
+    if exchange_field is not None:
+        # distributed: refresh ghost rings of the evaluation fields (the
+        # external state is refreshed inside run_external)
+        ux_e = exchange_field(ux_e)
+        uy_e = exchange_field(uy_e)
+        T_e = exchange_field(T_e)
+        S_e = exchange_field(S_e)
+        eta_e = exchange_field(eta_e)
+    nl, nt = cfg.nl, geom.nt
+    vge0 = layer_geometry(vg, st0.ext.eta, cfg.h_min)   # M0 mesh
+    vgee = layer_geometry(vg, eta_e, cfg.h_min)         # evaluation mesh
+
+    # --- density, pressure gradient r (matrix-free solve) -------------------
+    rho = eos.rho_prime(S_e, T_e, _pressure_dbar(vg, vgee), cfg.eos_kind)
+    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho)
+    r = vertical.solve_r(geom, F_r, r_s)                 # (2, nl, 6, nt)
+
+    # --- component 1: horizontal flux prediction (with q, not qbar) ---------
+    q = dg3d.transport_from_velocity(vgee, ux_e, uy_e)
+    flux_pred = dg3d.lateral_flux_speed(
+        geom, vgee, vg, q[0], q[1], eta_e, vg.b, h_min=cfg.h_min)
+    nu_h = dg3d.smagorinsky_nu(geom, ux_e, uy_e, cfg.cs_smag)
+    u_pair = jnp.stack([ux_e, uy_e])
+    f3h_pred = dg3d.horizontal_advdiff(
+        geom, vgee, nl, u_pair, q[0], q[1], flux_pred, nu_h, bc_reflect=True)
+    f3h_pred = f3h_pred + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
+
+    # F_3D->2D: vertical sum + wind + (predicted) bottom drag
+    drag = _bottom_drag_coeff(cfg, ux_e, uy_e)
+    dq = G.vol_interp(drag)
+    ubq = G.vol_interp(ux_e[-1, 3:6, :])
+    vbq = G.vol_interp(uy_e[-1, 3:6, :])
+    f3d2d_x = vsum_dofs(f3h_pred[0]) - G.vol_scatter(geom, dq * ubq)
+    f3d2d_y = vsum_dofs(f3h_pred[1]) - G.vol_scatter(geom, dq * vbq)
+    if forcing.tau_x is not None:
+        f3d2d_x = f3d2d_x + G.mass_apply(geom, forcing.tau_x)
+        f3d2d_y = f3d2d_y + G.mass_apply(geom, forcing.tau_y)
+
+    # --- component 2: external mode burst ------------------------------------
+    ext = dg2d.run_external(geom, vg.b, st0.ext, dtau, m_sub,
+                            forcing.forcing2d, f3d2d_x, f3d2d_y,
+                            h_min=cfg.h_min, exchange_fn=exchange2d,
+                            exchange_period=cfg.halo_exchange_period)
+    eta1 = ext.state.eta
+    vge1 = layer_geometry(vg, eta1, cfg.h_min)
+
+    # --- component 3: turbulence ---------------------------------------------
+    dz = jnp.maximum(vgee.H.mean(axis=0, keepdims=True), cfg.h_min) / nl  # (1, nt)
+    if cfg.use_gls and implicit:
+        m2, n2 = turbulence.shear_and_buoyancy(ux_e, uy_e, rho, dz)
+        turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
+    else:
+        turb1 = turb0
+    turb_used = turb1 if implicit else turb0
+    kv = turbulence.to_nodes(turb_used.nu_t) + cfg.nu_v_bg
+    kap = turbulence.to_nodes(turb_used.kappa_t) + cfg.kappa_v_bg
+
+    # --- consistent transport, vertical velocity, mesh velocity --------------
+    qbar = dg3d.consistent_transport(vgee, ux_e, uy_e, ext.q_bar_x,
+                                     ext.q_bar_y, nl)
+    if cfg.exact_consistency:
+        flux_c = dg3d.lateral_flux_speed(
+            geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b,
+            fbar_edge=ext.fbar_edge, qbar2d=(ext.q_bar_x, ext.q_bar_y),
+            h_min=cfg.h_min)
+    else:
+        flux_c = dg3d.lateral_flux_speed(
+            geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b, h_min=cfg.h_min)
+    w_t = vertical.solve_w(
+        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c))
+
+    wm_i = mesh_velocity(vg, st0.ext.eta, eta1, dtau)    # (nl+1, 3, nt)
+    wm_nodes = jnp.concatenate([wm_i[:-1], wm_i[1:]], axis=1)
+    wrel = w_t - wm_nodes
+    # interface advective speeds: value from BELOW each interface
+    wface = w_t[:, 0:3, :] - wm_i[:-1]                   # (nl, 3, nt)
+    wface = jnp.concatenate(
+        [wface, jnp.zeros((1, 3, nt), wface.dtype)], axis=0)  # floor: 0
+
+    # --- component 4: momentum update ----------------------------------------
+    f3h = dg3d.horizontal_advdiff(
+        geom, vgee, nl, u_pair, qbar[0], qbar[1], flux_c, nu_h,
+        bc_reflect=True)
+    f3h = f3h + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
+
+    H1 = jnp.maximum(eta1 + vg.b, cfg.h_min)
+    f2d_term = jnp.stack([
+        vertical.mass_apply3d(geom, vge1.jz, expand2d(ext.f2d_x / H1, nl)),
+        vertical.mass_apply3d(geom, vge1.jz, expand2d(ext.f2d_y / H1, nl))])
+    m0u = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.ux),
+                     vertical.mass_apply3d(geom, vge0.jz, st0.uy)])
+    wind = jnp.stack([
+        _wind_rhs(geom, forcing.tau_x, nl, nt, f3h.dtype),
+        _wind_rhs(geom, forcing.tau_y, nl, nt, f3h.dtype)])
+    rhs_u = m0u + dtau * (f3h + f2d_term + wind)
+
+    A_u = vertical.assemble_vertical_operator(
+        geom, nl, vgee.jz, wrel, wface, kv, vgee.H, drag_coeff=drag)
+    if implicit:
+        M1b = vertical.mass_blocks(geom, vge1.jz, nl)
+        sys = vertical.Blocks(lo=-dtau * A_u.lo, dg=M1b - dtau * A_u.dg,
+                              up=-dtau * A_u.up)
+        u1 = vertical.block_thomas_solve(sys, rhs_u)
+    else:
+        f3v = jnp.stack([vertical.blocks_matvec(A_u, ux_e),
+                         vertical.blocks_matvec(A_u, uy_e)])
+        u1 = jnp.stack([
+            vertical.mass_solve3d(geom, vge1.jz, rhs_u[0] + dtau * f3v[0]),
+            vertical.mass_solve3d(geom, vge1.jz, rhs_u[1] + dtau * f3v[1])])
+
+    # --- component 5: tracers (T & S solved together) -------------------------
+    kap_h = dg3d.okubo_kappa(geom, nl)
+    tr_pair = jnp.stack([T_e, S_e])
+    open_vals = None
+    if forcing.T_open is not None:
+        open_vals = jnp.stack([forcing.T_open, forcing.S_open])
+    f3h_tr = dg3d.horizontal_advdiff(
+        geom, vgee, nl, tr_pair, qbar[0], qbar[1], flux_c, kap_h,
+        bc_reflect=False, open_values=open_vals)
+    m0tr = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.T),
+                      vertical.mass_apply3d(geom, vge0.jz, st0.S)])
+    rhs_tr = m0tr + dtau * f3h_tr
+    A_tr = vertical.assemble_vertical_operator(
+        geom, nl, vgee.jz, wrel, wface, kap, vgee.H, drag_coeff=None)
+    if implicit:
+        M1b = vertical.mass_blocks(geom, vge1.jz, nl)
+        sysT = vertical.Blocks(lo=-dtau * A_tr.lo, dg=M1b - dtau * A_tr.dg,
+                               up=-dtau * A_tr.up)
+        tr1 = vertical.block_thomas_solve(sysT, rhs_tr)
+    else:
+        f3v_tr = jnp.stack([vertical.blocks_matvec(A_tr, T_e),
+                            vertical.blocks_matvec(A_tr, S_e)])
+        tr1 = jnp.stack([
+            vertical.mass_solve3d(geom, vge1.jz, rhs_tr[0] + dtau * f3v_tr[0]),
+            vertical.mass_solve3d(geom, vge1.jz, rhs_tr[1] + dtau * f3v_tr[1])])
+
+    if cfg.use_gls and not implicit:
+        # explicit steps update turbulence last (paper Fig. 2a caption),
+        # advancing from turb_base (t0) with end-of-step shear/buoyancy
+        rho1 = eos.rho_prime(tr1[1], tr1[0], _pressure_dbar(vg, vge1),
+                             cfg.eos_kind)
+        m2, n2 = turbulence.shear_and_buoyancy(u1[0], u1[1], rho1, dz)
+        turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
+
+    return StageOut(ext=ext.state, ux=u1[0], uy=u1[1], T=tr1[0], S=tr1[1],
+                    turb=turb1, r=r, w_tilde=w_t)
+
+
+def step(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st: OceanState,
+         forcing: Forcing3D = Forcing3D(),
+         exchange2d=None, exchange_field=None) -> OceanState:
+    """One full internal step: IMEX midpoint (stage 1 implicit over dt/2,
+    stage 2 explicit over dt with midpoint fluxes).  The exchange hooks are
+    supplied by the distributed runtime (distributed/ocean.py)."""
+    turb0 = turbulence.TurbState(st.turb_k, st.turb_eps, st.nu_t, st.kappa_t)
+
+    s1 = stage(geom, vg, cfg, st, st.ux, st.uy, st.T, st.S, st.ext.eta,
+               turb0, cfg.dt / 2, max(cfg.m_2d // 2, 1),
+               cfg.implicit_stage1, forcing,
+               exchange2d=exchange2d, exchange_field=exchange_field)
+
+    s2 = stage(geom, vg, cfg, st, s1.ux, s1.uy, s1.T, s1.S, s1.ext.eta,
+               s1.turb, cfg.dt, cfg.m_2d, False, forcing, turb_base=turb0,
+               exchange2d=exchange2d, exchange_field=exchange_field)
+
+    return OceanState(
+        ext=s2.ext, ux=s2.ux, uy=s2.uy, T=s2.T, S=s2.S,
+        turb_k=s2.turb.k, turb_eps=s2.turb.eps, nu_t=s2.turb.nu_t,
+        kappa_t=s2.turb.kappa_t, time=st.time + cfg.dt)

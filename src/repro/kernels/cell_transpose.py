@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: SoA <-> cell layout transposition (paper §2.1.2).
+
+"Thanks to the block-based nature of reads and writes between the cell and
+SoA layouts, this kernel nearly achieves peak memory bandwidth."  On TPU the
+transform is a per-cell reshape: SoA (nl, 6, nt) slabs of 128 columns become
+(nl*6, 128) cell matrices.  Both sides are read/written in full (8,128)-tile
+rows, so the kernel is a pure streaming copy — the roofline expectation is
+memory-term-bound at ~2x the array footprint, which is what the §Perf
+analysis of the lowered HLO shows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CELL = 128
+
+
+def _to_cell_kernel(x_ref, o_ref):
+    nl, six, c = x_ref.shape
+    o_ref[0] = x_ref[...].reshape(nl * six, c)
+
+
+def _from_cell_kernel(x_ref, o_ref):
+    _, rows, c = x_ref.shape
+    nl = rows // 6
+    o_ref[...] = x_ref[0].reshape(nl, 6, c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def soa_to_cell(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """(nl, 6, nt) -> (nt/128, nl*6, 128); nt % 128 == 0."""
+    nl, six, nt = x.shape
+    assert six == 6 and nt % CELL == 0
+    nc = nt // CELL
+    return pl.pallas_call(
+        _to_cell_kernel,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((nl, 6, CELL), lambda i: (0, 0, i))],
+        out_specs=pl.BlockSpec((1, nl * 6, CELL), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, nl * 6, CELL), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cell_to_soa(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """(nc, nl*6, 128) -> (nl, 6, nc*128)."""
+    nc, rows, c = x.shape
+    assert c == CELL and rows % 6 == 0
+    nl = rows // 6
+    return pl.pallas_call(
+        _from_cell_kernel,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((1, rows, CELL), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((nl, 6, CELL), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((nl, 6, nc * CELL), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash attention (forward) with optional causal mask and
+logit soft-capping (gemma2) and sliding-window (local) attention.
+
+Canonical TPU structure: grid = (batch*heads, q_blocks, kv_blocks) with the
+kv dimension innermost/sequential; running max m, normaliser l, and the
+output accumulator persist in VMEM scratch across kv iterations
+(online-softmax).  Block shapes default to (128, head_dim) — MXU-aligned.
+
+Used by the LM architectures for train/prefill attention on TPU; the XLA
+fallback (ref.chunked_attention) lowers the same math for the CPU dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, window, softcap, blk_q, blk_k):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0] * scale                       # (blk_q, d)
+    k = k_ref[0]                               # (blk_k, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_ids = qb * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_ids = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask = mask & (k_ids <= q_ids)
+    if window is not None:
+        mask = mask & (k_ids > q_ids - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (blk_q, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "blk_q", "blk_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (BH, Tq, d), k/v: (BH, Tk, d) -> (BH, Tq, d)."""
+    BH, Tq, d = q.shape
+    Tk = k.shape[1]
+    assert Tq % blk_q == 0 and Tk % blk_k == 0
+    scale = 1.0 / (d ** 0.5)
+    grid = (BH, Tq // blk_q, Tk // blk_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, blk_q=blk_q, blk_k=blk_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+                  pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0)),
+                  pl.BlockSpec((1, blk_k, d), lambda b, i, j: (b, j, 0))],
+        out_specs=pl.BlockSpec((1, blk_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_q, 1), jnp.float32),
+                        pltpu.VMEM((blk_q, 1), jnp.float32),
+                        pltpu.VMEM((blk_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: matrix-free column solvers for r and w (paper Alg. 1).
+
+The D_vu / D_vd systems reduce to a single sweep per column after applying
+M_h^{-1} per face (see core/vertical.py for the derivation).  SLIM's CUDA
+kernel holds a 3x2-component accumulator in registers and sweeps layer by
+layer; here the accumulator is a (3, BC) VREG-resident array and the sweep
+runs over the cell-layout rows (row = layer*6 + node), 128+ columns per lane.
+
+M_h^{-1} x = (12/A) (x - sum(x)/4) needs only the per-column triangle area —
+passed as a (1, BC) row — so the kernel never touches an assembled matrix:
+the paper's core trick, verbatim on TPU.
+
+Layouts: F, out are (nl*6, C) single-component cell-layout arrays; the ops.py
+wrapper maps components/fields.  Note the natural row tile here is 6 rows
+(not a multiple of 8 sublanes); the §Perf iteration found reading the full
+(nl*6, BC) block once and sweeping in-register to be the right structure
+anyway — no per-layer reload.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _minv_face(face, inv_area):
+    """M_h^{-1} on a (3, BC) face given (1, BC) 12/area."""
+    s = face[0, :] + face[1, :] + face[2, :]
+    return inv_area * (face - 0.25 * s[None, :])
+
+
+def _r_kernel(F_ref, area_ref, rs_ref, out_ref):
+    """Top-down sweep: r_b^l = r_b^{l-1} - (g_t + g_b); r_t^l = r_b^l + 2 g_b."""
+    rows = F_ref.shape[0]
+    nl = rows // 6
+    inv_area = 12.0 / area_ref[0, :][None, :]
+
+    def body(l, rb_prev):
+        base = l * 6
+        gt = _minv_face(F_ref[pl.dslice(base, 3), :], inv_area)
+        gb = _minv_face(F_ref[pl.dslice(base + 3, 3), :], inv_area)
+        rb = rb_prev - gt - gb
+        rt = rb + 2.0 * gb
+        out_ref[pl.dslice(base, 3), :] = rt
+        out_ref[pl.dslice(base + 3, 3), :] = rb
+        return rb
+
+    jax.lax.fori_loop(0, nl, body, rs_ref[...])
+
+
+def _w_kernel(F_ref, area_ref, wf_ref, out_ref):
+    """Bottom-up sweep: w_t^l = w_t^{l+1} + g_t + g_b; w_b^l = w_t^l - 2 g_t."""
+    rows = F_ref.shape[0]
+    nl = rows // 6
+    inv_area = 12.0 / area_ref[0, :][None, :]
+
+    def body(j, wt_next):
+        l = nl - 1 - j
+        base = l * 6
+        gt = _minv_face(F_ref[pl.dslice(base, 3), :], inv_area)
+        gb = _minv_face(F_ref[pl.dslice(base + 3, 3), :], inv_area)
+        wt = wt_next + gt + gb
+        wb = wt - 2.0 * gt
+        out_ref[pl.dslice(base, 3), :] = wt
+        out_ref[pl.dslice(base + 3, 3), :] = wb
+        return wt
+
+    jax.lax.fori_loop(0, nl, body, wf_ref[...])
+
+
+def _call(kernel, F, area, bc_vals, block_cols, interpret):
+    rows, C = F.shape
+    assert C % block_cols == 0
+    grid = (C // block_cols,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
+                  pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+                  pl.BlockSpec((3, block_cols), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((rows, C), F.dtype),
+        interpret=interpret,
+    )(F, area, bc_vals)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def solve_r_cell(F: jax.Array, area: jax.Array, r_surf: jax.Array,
+                 block_cols: int = 128, interpret: bool = True) -> jax.Array:
+    """F: (nl*6, C) cell-layout RHS; area: (1, C); r_surf: (3, C)."""
+    return _call(_r_kernel, F, area, r_surf, block_cols, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def solve_w_cell(F: jax.Array, area: jax.Array, w_floor: jax.Array,
+                 block_cols: int = 128, interpret: bool = True) -> jax.Array:
+    """F: (nl*6, C) cell-layout RHS; area: (1, C); w_floor: (3, C)."""
+    return _call(_w_kernel, F, area, w_floor, block_cols, interpret)

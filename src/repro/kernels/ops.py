@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels with platform dispatch.
+
+On TPU the Pallas kernels compile natively (interpret=False); on CPU they
+run in interpret mode for validation, or fall back to the pure-jnp refs
+(`backend='ref'`) which XLA fuses well — the CPU benchmarks and the dry-run
+lowering use the ref path, the kernel tests use interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import cell_transpose, column_solve, flash_attention, matrix_free
+from . import ref as _ref
+from . import tridiag as _tridiag
+from . import wkv6 as _wkv6
+
+
+def default_backend() -> str:
+    plat = jax.default_backend()
+    return "kernel" if plat == "tpu" else "ref"
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tridiag(dl, d, du, b, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.tridiag(dl, d, du, b)
+    return _tridiag.tridiag_cell(dl, d, du, b, interpret=_interp())
+
+
+def solve_r_cell(F, area, r_surf, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.solve_r_cell(F, area, r_surf)
+    return matrix_free.solve_r_cell(F, area, r_surf, interpret=_interp())
+
+
+def solve_w_cell(F, area, w_floor, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.solve_w_cell(F, area, w_floor)
+    return matrix_free.solve_w_cell(F, area, w_floor, interpret=_interp())
+
+
+def block_thomas_cell(lo, dg, up, b, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.block_thomas_cell(lo, dg, up, b)
+    return column_solve.block_thomas_cell(lo, dg, up, b, interpret=_interp())
+
+
+def soa_to_cell(x, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.soa_to_cell(x)
+    return cell_transpose.soa_to_cell(x, interpret=_interp())
+
+
+def cell_to_soa(x, nt, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.cell_to_soa(x, nt)
+    return cell_transpose.cell_to_soa(x, interpret=_interp())[..., :nt]
+
+
+def wkv6(r, k, v, w, u, backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.wkv6(r, k, v, w, u)
+    return _wkv6.wkv6(r, k, v, w, u, interpret=_interp())
+
+
+def attention(q, k, v, causal=True, window=None, softcap=None,
+              backend: str | None = None):
+    backend = backend or default_backend()
+    if backend == "ref":
+        return _ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                      softcap=softcap)
+    return flash_attention.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=_interp())

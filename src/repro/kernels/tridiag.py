@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: batched tridiagonal (Thomas) solver in cell layout.
+
+Paper §2.4: the GLS turbulence closure has one DOF per prism, giving one
+tridiagonal system per column.  SLIM solves 128 columns per 128-thread CUDA
+block with perfectly coalesced access in the cell layout.
+
+TPU adaptation (DESIGN.md §2): columns ride in the **lane** dimension —
+arrays are (nl, C) with C a multiple of 128.  The sequential forward/backward
+sweep runs over rows (layers); every row operation is a native (1, 128*k)
+vector op across independent columns.  The VMEM working set per grid step is
+4 x nl x BC floats (inputs) + 2 x nl x BC (x, cp scratch); with nl=64 and
+BC=256 that is ~400 KB — comfortably inside the ~16 MB VMEM budget, leaving
+headroom for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tridiag_kernel(dl_ref, d_ref, du_ref, b_ref, x_ref, cp_ref):
+    nl = d_ref.shape[0]
+    zero = jnp.zeros_like(d_ref[0, :])
+
+    def fwd(i, carry):
+        cp_prev, dp_prev = carry
+        a = dl_ref[i, :]
+        denom = d_ref[i, :] - a * cp_prev
+        cp = du_ref[i, :] / denom
+        dp = (b_ref[i, :] - a * dp_prev) / denom
+        cp_ref[i, :] = cp
+        x_ref[i, :] = dp
+        return cp, dp
+
+    jax.lax.fori_loop(0, nl, fwd, (zero, zero))
+
+    def bwd(j, x_next):
+        i = nl - 2 - j
+        xi = x_ref[i, :] - cp_ref[i, :] * x_next
+        x_ref[i, :] = xi
+        return xi
+
+    jax.lax.fori_loop(0, nl - 1, bwd, x_ref[nl - 1, :])
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def tridiag_cell(dl: jax.Array, d: jax.Array, du: jax.Array, b: jax.Array,
+                 block_cols: int = 128, interpret: bool = True) -> jax.Array:
+    """Solve tridiagonal systems; all operands (nl, C), C % block_cols == 0.
+
+    dl[0] / du[nl-1] are ignored. Columns are independent (lanes)."""
+    nl, C = d.shape
+    assert C % block_cols == 0, (C, block_cols)
+    grid = (C // block_cols,)
+    spec = pl.BlockSpec((nl, block_cols), lambda i: (0, i))
+    return pl.pallas_call(
+        _tridiag_kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((nl, C), d.dtype),
+        scratch_shapes=[pltpu.VMEM((nl, block_cols), d.dtype)],
+        interpret=interpret,
+    )(dl, d, du, b)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: RWKV6 (Finch) WKV recurrence with data-dependent decay.
+
+Per head, with state S in R^{K x V}:
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+This is the same computational motif as the paper's column solvers —
+independent sequential recurrences batched across lanes (here the V dim rides
+in lanes, the K dim in sublanes, and (batch x heads) is the grid) — which is
+why the ocean model's cell-layout insight transfers directly to the rwkv6-3b
+architecture (DESIGN.md §6).
+
+The time axis is processed in chunks of T_blk rows; S persists in VMEM
+scratch across the chunk grid dimension (sequential innermost dimension).
+VMEM per step: (K=64, V=64) state = 16 KB + 4 x (T_blk, 64) operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.partial(jax.jit, static_argnames=("t_block", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, t_block: int = 128, interpret: bool = True):
+    """RWKV6 WKV.
+
+    r, k, w: (BH, T, K); v: (BH, T, V); u: (K,). Returns (BH, T, V).
+    T % t_block == 0."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % t_block == 0
+    grid = (BH, T // t_block)
+    tspec = lambda d: pl.BlockSpec((1, t_block, d), lambda b, t: (b, t, 0))
+
+    def kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, S_ref):
+        # refs carry a leading block dim of 1; index it at use sites
+        # (slicing a ref materialises a value — outputs must stay refs)
+        tb = pl.program_id(1)
+
+        @pl.when(tb == 0)
+        def _():
+            S_ref[...] = jnp.zeros_like(S_ref)
+
+        u_ = u_ref[0, :]
+
+        def body(t, S):
+            kt = k_ref[0, t, :]
+            vt = v_ref[0, t, :]
+            rt = r_ref[0, t, :]
+            wt = w_ref[0, t, :]
+            kv = kt[:, None] * vt[None, :]
+            o_ref[0, t, :] = (rt[:, None] * (S + u_[:, None] * kv)).sum(
+                axis=0).astype(o_ref.dtype)
+            return wt[:, None] * S + kv
+
+        S_ref[...] = jax.lax.fori_loop(0, t_block, body, S_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tspec(K), tspec(K), tspec(V), tspec(K),
+                  pl.BlockSpec((1, K), lambda b, t: (0, 0))],
+        out_specs=tspec(V),
+        out_shape=jax.ShapeDtypeStruct((BH, T, V), v.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u[None, :])

@@ -1,0 +1,28 @@
+"""Production device meshes.
+
+Defined as functions (not module constants) so importing never touches jax
+device state.  Target: TPU v5e pods — 256 chips (16x16) per pod; the
+multi-pod configuration adds a leading "pod" axis (2 x 16 x 16 = 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4) -> jax.sharding.Mesh:
+    """Small mesh for unit tests under --xla_force_host_platform_device_count."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """Data-parallel axis names for a mesh (pod folds into DP)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

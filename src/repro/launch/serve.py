@@ -1,0 +1,72 @@
+"""Serving launcher: prefill + batched decode for any decoder architecture.
+
+Demonstrates the inference path end-to-end: cache init, prefill via the
+full-sequence forward, then jit'd single-token decode steps (greedy).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
+      --prompt-len 32 --gen 16 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch, reduce_arch
+from ..models.model import Model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if arch.encoder_only:
+        raise SystemExit(f"{arch.name} is encoder-only: no decode path")
+    if args.reduced:
+        arch = reduce_arch(arch)
+    model = Model(arch, dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_len)
+    rng = jax.random.PRNGKey(1)
+    toks = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                              arch.vocab)
+
+    decode = jax.jit(model.decode_step)
+    # prefill by stepping the cache through the prompt (state-correct for
+    # all families incl. rwkv/mamba)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params, cache, toks[:, t:t + 1], jnp.int32(t))
+    t_prefill = time.time() - t0
+
+    out = []
+    t0 = time.time()
+    cur = jnp.argmax(logits, axis=-1)[:, None]
+    for t in range(args.prompt_len, max_len):
+        out.append(cur)
+        logits, cache = decode(params, cache, cur, jnp.int32(t))
+        cur = jnp.argmax(logits, axis=-1)[:, None]
+    jax.block_until_ready(logits)
+    t_gen = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={arch.name} batch={args.batch}")
+    print(f"prefill {args.prompt_len} tok: {t_prefill:.2f}s; "
+          f"decode {args.gen} tok: {t_gen:.2f}s "
+          f"({args.gen * args.batch / max(t_gen, 1e-9):.1f} tok/s)")
+    print("sample token ids:", [int(x) for x in gen[0][:10]])
+    assert bool(jnp.isfinite(logits).all())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Flash attention in plain XLA with a custom VJP (the dry-run/CPU analogue
+of the Pallas kernel; same math, O(T) memory in BOTH directions).
+
+Without this, differentiating the blocked-softmax scans saves the per-block
+probability tensors for backward — (nq, nk, B, H, qb, ck) f32 = tens of GiB
+per device at 4k context (observed 16 GiB on olmo-1b train_4k).  The custom
+VJP stores only (out, m, l) row statistics and recomputes scores per block in
+the backward sweep, exactly like the TPU kernel's bwd pass.
+
+Layout: (B, H, T, d) with NO B*H merge — the head axis keeps its `model`
+sharding through every einsum (merging B with a sharded H forced an
+all-gather of the heads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(q0, k0, qb, ck, causal, window):
+    q_ids = q0 + jnp.arange(qb)[:, None]
+    k_ids = k0 + jnp.arange(ck)[None, :]
+    m = jnp.ones((qb, ck), bool)
+    if causal:
+        m = m & (k_ids <= q_ids)
+    if window is not None:
+        m = m & (k_ids > q_ids - window)
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal=True, window=None, softcap=None,
+                        q_block=512, k_block=1024):
+    out, _, _ = _forward(q, k, v, causal, window, softcap, q_block, k_block)
+    return out
+
+
+def _forward(q, k, v, causal, window, softcap, q_block, k_block):
+    B, H, Tq, d = q.shape
+    Tk = k.shape[2]
+    qb = min(q_block, Tq)
+    ck = min(k_block, Tk)
+    nq, nk = Tq // qb, Tk // ck
+    scale = 1.0 / (d ** 0.5)
+    ks = k.reshape(B, H, nk, ck, d)
+    vs = v.reshape(B, H, nk, ck, d)
+
+    def one_q(args):
+        qc, iq = args                                    # (B, H, qb, d)
+        qcf = qc.astype(jnp.float32) * scale
+
+        def body(carry, j):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_index_in_dim(ks, j, 2, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, j, 2, keepdims=False)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qcf, kc.astype(jnp.float32))
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            msk = _mask(iq * qb, j * ck, qb, ck, causal, window)
+            s = jnp.where(msk[None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = alpha * acc + jnp.einsum("bhqk,bhkd->bhqd", p,
+                                           vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, qb, 1), NEG, jnp.float32),
+                jnp.zeros((B, H, qb, 1), jnp.float32),
+                jnp.zeros((B, H, qb, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30), m, l
+
+    qs = q.reshape(B, H, nq, qb, d).transpose(2, 0, 1, 3, 4)
+    out, m, l = jax.lax.map(one_q, (qs, jnp.arange(nq)))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, Tq, d).astype(q.dtype)
+    m = m.transpose(1, 2, 0, 3, 4).reshape(B, H, Tq, 1)
+    l = l.transpose(1, 2, 0, 3, 4).reshape(B, H, Tq, 1)
+    return out, m, l
+
+
+def _fwd_rule(q, k, v, causal, window, softcap, q_block, k_block):
+    out, m, l = _forward(q, k, v, causal, window, softcap, q_block, k_block)
+    return out, (q, k, v, out, m, l)
+
+
+def _bwd_rule(causal, window, softcap, q_block, k_block, res, dout):
+    """Two-pass flash backward: q-outer loop for dq, kv-outer loop for dk/dv
+    (recomputing scores in each — no stacked (nq x nk) probability tensors;
+    peak extra memory is one (B, H, qb, ck) block)."""
+    q, k, v, out, m, l = res
+    B, H, Tq, d = q.shape
+    Tk = k.shape[2]
+    qb = min(q_block, Tq)
+    ck = min(k_block, Tk)
+    nq, nk = Tq // qb, Tk // ck
+    scale = 1.0 / (d ** 0.5)
+    Dsum = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                   axis=-1, keepdims=True)                # (B,H,Tq,1)
+    ks_ = k.reshape(B, H, nk, ck, d)
+    vs_ = v.reshape(B, H, nk, ck, d)
+    qs_ = q.reshape(B, H, nq, qb, d)
+    do_ = dout.reshape(B, H, nq, qb, d)
+    ms_ = m.reshape(B, H, nq, qb, 1)
+    ls_ = l.reshape(B, H, nq, qb, 1)
+    Ds_ = Dsum.reshape(B, H, nq, qb, 1)
+
+    def block_grads(iq, j, qc, dc, mc, lc, Dc):
+        """Recompute p for block (iq, j); return (ds, p) pieces."""
+        qcf = qc.astype(jnp.float32) * scale
+        kc = jax.lax.dynamic_index_in_dim(ks_, j, 2, keepdims=False
+                                          ).astype(jnp.float32)
+        vc = jax.lax.dynamic_index_in_dim(vs_, j, 2, keepdims=False
+                                          ).astype(jnp.float32)
+        s_raw = jnp.einsum("bhqd,bhkd->bhqk", qcf, kc)
+        if softcap is not None:
+            t = jnp.tanh(s_raw / softcap)
+            s = softcap * t
+        else:
+            t = None
+            s = s_raw
+        msk = _mask(iq * qb, j * ck, qb, ck, causal, window)
+        s = jnp.where(msk[None, None], s, NEG)
+        p = jnp.exp(s - mc) / jnp.maximum(lc, 1e-30)      # (B,H,qb,ck)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dc.astype(jnp.float32), vc)
+        ds = p * (dp - Dc)
+        if softcap is not None:
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(msk[None, None], ds, 0.0)
+        return ds, p, kc, qcf
+
+    # pass 1: dq, q-blocks outer
+    def one_q(args):
+        qc, dc, mc, lc, Dc, iq = args
+
+        def body(dq, j):
+            ds, _, kc, _ = block_grads(iq, j, qc, dc, mc, lc, Dc)
+            return dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kc) * scale, None
+
+        dq, _ = jax.lax.scan(body, jnp.zeros((B, H, qb, d), jnp.float32),
+                             jnp.arange(nk))
+        return dq
+
+    qs_t = qs_.transpose(2, 0, 1, 3, 4)
+    do_t = do_.transpose(2, 0, 1, 3, 4)
+    ms_t = ms_.transpose(2, 0, 1, 3, 4)
+    ls_t = ls_.transpose(2, 0, 1, 3, 4)
+    Ds_t = Ds_.transpose(2, 0, 1, 3, 4)
+    dq = jax.lax.map(one_q, (qs_t, do_t, ms_t, ls_t, Ds_t, jnp.arange(nq)))
+    dq = dq.transpose(1, 2, 0, 3, 4).reshape(B, H, Tq, d).astype(q.dtype)
+
+    # pass 2: dk/dv, kv-blocks outer, q inner (accumulated in carry)
+    def one_k(j):
+        def body(carry, iq):
+            dk_j, dv_j = carry
+            qc = jax.lax.dynamic_index_in_dim(qs_, iq, 2, keepdims=False)
+            dc = jax.lax.dynamic_index_in_dim(do_, iq, 2, keepdims=False)
+            mc = jax.lax.dynamic_index_in_dim(ms_, iq, 2, keepdims=False)
+            lc = jax.lax.dynamic_index_in_dim(ls_, iq, 2, keepdims=False)
+            Dc = jax.lax.dynamic_index_in_dim(Ds_, iq, 2, keepdims=False)
+            ds, p, _, qcf = block_grads(iq, j, qc, dc, mc, lc, Dc)
+            dk_j = dk_j + jnp.einsum("bhqk,bhqd->bhkd", ds, qcf)
+            dv_j = dv_j + jnp.einsum("bhqk,bhqd->bhkd", p,
+                                     dc.astype(jnp.float32))
+            return (dk_j, dv_j), None
+
+        z = jnp.zeros((B, H, ck, d), jnp.float32)
+        (dk_j, dv_j), _ = jax.lax.scan(body, (z, z), jnp.arange(nq))
+        return dk_j, dv_j
+
+    dks, dvs = jax.lax.map(one_k, jnp.arange(nk))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, H, Tk, d).astype(k.dtype)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, H, Tk, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_xla.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,195 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (train/prefill and
+cached decode, incl. gemma2 sliding-window + logit soft-cap, olmo
+non-parametric LN), MLPs.
+
+Conventions: activations (B, T, D); params are nested dicts of arrays;
+attention weights are stored head-major so the `model` mesh axis shards the
+head dimension (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+
+
+# --- norms ---------------------------------------------------------------------
+def rms_norm(x, w, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(v + eps) * (1.0 + w)).astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-5):
+    """OLMo: LayerNorm without any learnable parameters."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm(x, w, kind: str):
+    if kind == "nonparam":
+        return nonparam_layer_norm(x)
+    return rms_norm(x, w)
+
+
+# --- RoPE ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array):
+    """positions (T,) -> (T, head_dim/2) cos/sin tables."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, T, H, hd); cos/sin (T, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+                           ).astype(x.dtype)
+
+
+# --- attention --------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 1e4
+    window: Optional[int] = None      # sliding-window size (gemma2 local)
+    softcap: Optional[float] = None   # logit soft-capping (gemma2)
+    causal: bool = True               # False for encoder-only (hubert)
+    pad_heads_to: Optional[int] = None  # pad H for TP divisibility (§Perf:
+                                        # starcoder2's 24 heads vs 16-way
+                                        # model axis -> pad activations to 32
+                                        # so each device owns 2 heads instead
+                                        # of computing all 24)
+
+
+def attn_params(rng, d_model, cfg: AttnCfg, dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    sc = 1.0 / (d_model ** 0.5)
+    return {
+        "wq": (jax.random.normal(k1, (d_model, cfg.n_heads, hd)) * sc).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, cfg.n_kv, hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, cfg.n_kv, hd)) * sc).astype(dtype),
+        "wo": (jax.random.normal(k4, (cfg.n_heads, hd, d_model)) * sc).astype(dtype),
+    }
+
+
+def _repeat_kv(k, n_heads):
+    """(B, T, Kv, hd) -> (B, T, H, hd) by group replication."""
+    B, T, Kv, hd = k.shape
+    rep = n_heads // Kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention(p, x, cfg: AttnCfg, positions: jax.Array,
+              head_sharding=None):
+    """Full (train/prefill) attention. x (B, T, D) -> (B, T, D).
+
+    Uses the custom-VJP flash path on a (B, H, T, d) layout: the head axis
+    keeps its `model` sharding (no B*H merge) and the backward pass
+    recomputes scores per block (O(T) activation memory)."""
+    from .attention import flash_attention_xla
+    B, T, D = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    qh = q.transpose(0, 2, 1, 3)          # (B, H, T, hd)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    Hp = cfg.pad_heads_to
+    if Hp is not None and Hp > cfg.n_heads:
+        padw = [(0, 0), (0, Hp - cfg.n_heads), (0, 0), (0, 0)]
+        qh = jnp.pad(qh, padw)
+        kh = jnp.pad(kh, padw)
+        vh = jnp.pad(vh, padw)
+    if head_sharding is not None:
+        qh = jax.lax.with_sharding_constraint(qh, head_sharding)
+        kh = jax.lax.with_sharding_constraint(kh, head_sharding)
+        vh = jax.lax.with_sharding_constraint(vh, head_sharding)
+    out = flash_attention_xla(qh, kh, vh, cfg.causal, cfg.window,
+                              cfg.softcap)
+    if Hp is not None and Hp > cfg.n_heads:
+        out = out[:, :cfg.n_heads]
+    out = out.transpose(0, 2, 1, 3)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"])
+
+
+def decode_attention(p, x, cfg: AttnCfg, kv_cache, pos: jax.Array):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, D); kv_cache: dict(k, v: (B, Tmax, Kv, hd)); pos: scalar index.
+    Returns (out (B, 1, D), new_cache).  The cache T axis may be sharded over
+    the data axis for long-context cells (flash-decode combine happens via
+    the masked online softmax below under GSPMD)."""
+    B, _, D = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k_new = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v_new = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    posv = jnp.asarray([pos])
+    cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, posv)
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    # index dtypes must match even under x64-enabled test environments
+    pos = jnp.asarray(pos, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    kc = jax.lax.dynamic_update_slice(kv_cache["k"], k_new.astype(
+        kv_cache["k"].dtype), (z, pos, z, z))
+    vc = jax.lax.dynamic_update_slice(kv_cache["v"], v_new.astype(
+        kv_cache["v"].dtype), (z, pos, z, z))
+    Tmax = kc.shape[1]
+    ids = jnp.arange(Tmax)
+    valid = ids <= pos
+    if cfg.window is not None:
+        valid = valid & (ids > pos - cfg.window)
+    # grouped-head attention: never materialise the repeated KV. The cache's
+    # T axis may be sharded (long-context cells): the reductions over t below
+    # become local-reduce + small all-reduce under GSPMD (flash-decode).
+    rep = cfg.n_heads // cfg.n_kv
+    qg = q[:, 0].reshape(B, cfg.n_kv, rep, cfg.head_dim).astype(jnp.float32)
+    s = jnp.einsum("bgrk,btgk->bgrt", qg, kc.astype(jnp.float32)) / (
+        cfg.head_dim ** 0.5)
+    if cfg.softcap is not None:
+        s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrt,btgk->bgrk", pattn, vc.astype(jnp.float32))
+    out = out.reshape(B, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bhk,hkd->bd", out.astype(x.dtype), p["wo"])
+    return out[:, None, :], {"k": kc, "v": vc}
+
+
+# --- MLPs ------------------------------------------------------------------------
+def mlp_params(rng, d_model, d_ff, act: str, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    sc_in = 1.0 / (d_model ** 0.5)
+    sc_out = 1.0 / (d_ff ** 0.5)
+    p = {"w_out": (jax.random.normal(k2, (d_ff, d_model)) * sc_out).astype(dtype)}
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * sc_in).astype(dtype)
+        p["w_in"] = (jax.random.normal(k3, (d_model, d_ff)) * sc_in).astype(dtype)
+    else:
+        p["w_in"] = (jax.random.normal(k1, (d_model, d_ff)) * sc_in).astype(dtype)
+    return p
+
+
+def mlp(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = jax.nn.gelu(x @ p["w_in"])
+    return h @ p["w_out"]

@@ -1,0 +1,387 @@
+"""Unified LM model: builds any assigned architecture from its ArchConfig.
+
+Layer stacks are expressed as a *super-block program*: a static list of
+sub-layer descriptors (mixer kind, FFN kind, attention window) that repeats
+n_super = L / len(program) times.  The stack is one lax.scan over stacked
+per-super-block parameters with the program unrolled inside the body — so
+
+  * compile time / HLO size stay O(1) in depth,
+  * heterogeneous patterns (gemma2 local/global alternation, jamba's
+    1-attention-per-8 + MoE-every-2, phi/qwen all-MoE) cost exactly their
+    own FLOPs (no masked double-compute — the roofline useful-FLOPs ratio
+    stays honest),
+  * decode uses the same program with per-sub-layer caches.
+
+Entry points per arch: loss/train forward (train_4k), prefill
+(prefill_32k; encode for encoder-only), decode_step (decode_32k/long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import layers, mamba, moe, rwkv
+from .layers import AttnCfg
+
+Params = Dict[str, Any]
+_BIG_WINDOW = None  # global attention
+
+
+@dataclasses.dataclass(frozen=True)
+class SubLayer:
+    mixer: str                     # attn | mamba | rwkv
+    ffn: str                       # dense | moe | none (rwkv has channel-mix)
+    window: Optional[int] = None   # static sliding window for this sub-layer
+
+
+def block_program(arch: ArchConfig) -> List[SubLayer]:
+    """The static per-super-block layer pattern of an architecture."""
+    if arch.family == "ssm":
+        return [SubLayer("rwkv", "none")]
+    if arch.attn_period > 0:       # jamba: attn at the middle of each block,
+        prog = []                  # MoE on odd sub-layers
+        for i in range(arch.attn_period):
+            mixer = "attn" if i == arch.attn_period // 2 else "mamba"
+            ffn = "moe" if (arch.moe is not None and
+                            i % arch.moe_period == arch.moe_period - 1) \
+                else "dense"
+            prog.append(SubLayer(mixer, ffn))
+        return prog
+    if arch.alt_local_global:      # gemma2: local (windowed) then global
+        return [SubLayer("attn", "dense", window=arch.window),
+                SubLayer("attn", "dense", window=None)]
+    if arch.moe is not None:
+        if arch.moe_period > 1:
+            return ([SubLayer("attn", "dense")] * (arch.moe_period - 1)
+                    + [SubLayer("attn", "moe")])
+        return [SubLayer("attn", "moe")]
+    return [SubLayer("attn", "dense", window=arch.window)]
+
+
+def _attn_cfg(arch: ArchConfig, window, pad_heads_to=None) -> AttnCfg:
+    return AttnCfg(n_heads=arch.n_heads, n_kv=arch.n_kv, head_dim=arch.hd,
+                   rope_theta=arch.rope_theta, window=window,
+                   softcap=arch.softcap_attn, causal=arch.causal,
+                   pad_heads_to=pad_heads_to)
+
+
+class Model:
+    """Architecture-parameterised model (pure functions + config)."""
+
+    def __init__(self, arch: ArchConfig, dtype=jnp.bfloat16):
+        self.arch = arch
+        self.dtype = dtype
+        # optional NamedShardings set by the launcher: logits keeps (B,T,V)
+        # vocab-sharded through the loss; act pins the residual stream to
+        # batch-sharding at block boundaries (without this, FSDP weight
+        # sharding on contracted dims makes GSPMD replicate the batch)
+        self.logits_sharding = None
+        self.act_sharding = None        # residual stream BETWEEN blocks
+        self.act_inner_sharding = None  # WITHIN a block (Megatron-SP: the
+                                        # carry stays seq-sharded, compute
+                                        # runs on the gathered sequence)
+        self.head_sharding = None   # (B*H, T, K) reshard for rwkv wkv
+        # two-level remat: scan over groups of super-blocks with the whole
+        # group checkpointed -> per-layer residual stacks never materialise
+        # (only n_groups carries + one transient group in backward)
+        self.remat_groups = None
+        self.moe_hidden_sharding = None  # decode: pin (B,T,E,F) dispatch
+        self.pad_heads_to = None         # TP head padding (see AttnCfg)
+        self.attn_head_sharding = None   # (B, H, T, d) pin for padded heads
+        self.program = block_program(arch)
+        assert arch.n_layers % len(self.program) == 0, (
+            arch.name, arch.n_layers, len(self.program))
+        self.n_super = arch.n_layers // len(self.program)
+
+    # ------------------------------------------------------------------ init
+    def _sub_init(self, rng, sub: SubLayer) -> Params:
+        a = self.arch
+        D, F = a.d_model, a.d_ff
+        ks = jax.random.split(rng, 4)
+        p: Params = {"ln1": jnp.zeros((D,), self.dtype),
+                     "ln2": jnp.zeros((D,), self.dtype)}
+        if sub.mixer == "rwkv":
+            p["rwkv"] = rwkv.rwkv_params(ks[0], D, F, a.rwkv, self.dtype)
+            return p
+        if sub.mixer == "attn":
+            p["attn"] = layers.attn_params(ks[0], D, _attn_cfg(a, None),
+                                           self.dtype)
+        else:
+            p["mamba"] = mamba.mamba_params(ks[0], D, a.mamba, self.dtype)
+        if sub.ffn == "moe":
+            p["moe"] = moe.moe_params(ks[1], D, a.moe, a.act, self.dtype)
+        elif sub.ffn == "dense":
+            p["mlp"] = layers.mlp_params(ks[1], D, F, a.act, self.dtype)
+        return p
+
+    def init(self, rng) -> Params:
+        a = self.arch
+        k_emb, k_head, k_layers, k_fr = jax.random.split(rng, 4)
+        D = a.d_model
+        p: Params = {
+            "embed": (jax.random.normal(k_emb, (a.vocab, D)) * 0.02
+                      ).astype(self.dtype),
+            "final_norm": jnp.zeros((D,), self.dtype),
+        }
+        if not a.tie_embeddings:
+            p["head"] = (jax.random.normal(k_head, (D, a.vocab)) * 0.02
+                         ).astype(self.dtype)
+        blocks = {}
+        keys = jax.random.split(k_layers, len(self.program))
+        for i, sub in enumerate(self.program):
+            sks = jax.random.split(keys[i], self.n_super)
+            blocks[f"sub{i}"] = jax.vmap(
+                functools.partial(self._sub_init, sub=sub))(sks)
+        p["blocks"] = blocks
+        if a.frontend == "vlm":
+            p["vlm_proj"] = (jax.random.normal(k_fr, (D, D)) / (D ** 0.5)
+                             ).astype(self.dtype)
+        if a.frontend == "audio":
+            p["audio_proj"] = (jax.random.normal(k_fr, (D, D)) / (D ** 0.5)
+                               ).astype(self.dtype)
+        return p
+
+    def init_abstract(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -------------------------------------------------------------- sublayer
+    def _apply_sub(self, p, x, sub: SubLayer, positions):
+        a = self.arch
+        aux = jnp.zeros((), jnp.float32)
+        h = layers.norm(x, p["ln1"], a.norm)
+        if sub.mixer == "rwkv":
+            tm, _ = rwkv.time_mix(p["rwkv"], h, a.rwkv,
+                                  head_sharding=self.head_sharding)
+            x = x + tm
+            cm, _ = rwkv.channel_mix(p["rwkv"],
+                                     layers.norm(x, p["ln2"], a.norm))
+            return x + cm, aux
+        if sub.mixer == "attn":
+            mix = layers.attention(
+                p["attn"], h,
+                _attn_cfg(a, sub.window, pad_heads_to=self.pad_heads_to),
+                positions, head_sharding=self.attn_head_sharding)
+        else:
+            mix = mamba.mamba_apply(p["mamba"], h, a.mamba)
+        x = x + mix
+        h2 = layers.norm(x, p["ln2"], a.norm)
+        if sub.ffn == "moe":
+            ffn, aux = moe.moe_apply(p["moe"], h2, a.moe)
+        else:
+            ffn = layers.mlp(p["mlp"], h2, a.act)
+        return x + ffn, aux
+
+    def _embed(self, params, batch):
+        a = self.arch
+        if a.frontend == "audio":
+            return batch["frame_embeds"].astype(self.dtype) @ params["audio_proj"]
+        x = params["embed"][batch["tokens"]]
+        if a.name.startswith("gemma"):
+            x = x * jnp.asarray(a.d_model ** 0.5, x.dtype)
+        if a.frontend == "vlm":
+            pe = batch["patch_embeds"].astype(self.dtype) @ params["vlm_proj"]
+            x = jnp.concatenate([pe, x[:, a.n_patches:]], axis=1)
+        return x
+
+    # ---------------------------------------------------------------- forward
+    def _pin(self, x):
+        if self.act_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_sharding)
+        return x
+
+    def _pin_inner(self, x):
+        if self.act_inner_sharding is not None and x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, self.act_inner_sharding)
+        return x
+
+    def forward(self, params, batch):
+        """Full-sequence forward -> (logits (B, T, V), aux_loss)."""
+        a = self.arch
+        x = self._pin(self._embed(params, batch))
+        positions = jnp.arange(x.shape[1])
+
+        def body(xc, blk):
+            aux = jnp.zeros((), jnp.float32)
+            for i, sub in enumerate(self.program):
+                def fn(p_, x_, sub=sub):
+                    # gather the sequence at block entry (Megatron-SP),
+                    # compute on the full sequence, let the trailing pin
+                    # reduce-scatter the output back to the sharded carry
+                    x_ = self._pin_inner(x_)
+                    return self._apply_sub(p_, x_, sub, positions)
+                if a.remat:
+                    fn = jax.checkpoint(
+                        fn, policy=jax.checkpoint_policies.nothing_saveable)
+                xc, a_ = fn(blk[f"sub{i}"], xc)
+                xc = self._pin(xc)
+                aux = aux + a_
+            return xc, aux
+
+        groups = self.remat_groups
+        if groups and groups > 1 and self.n_super % groups == 0 and a.remat:
+            gs = self.n_super // groups
+            blocks_g = jax.tree_util.tree_map(
+                lambda t: t.reshape((groups, gs) + t.shape[1:]),
+                params["blocks"])
+
+            @jax.checkpoint
+            def group_body(xc, blkg):
+                return jax.lax.scan(body, xc, blkg)
+
+            x, auxes = jax.lax.scan(group_body, x, blocks_g)
+        else:
+            x, auxes = jax.lax.scan(body, x, params["blocks"])
+        x = layers.norm(x, params["final_norm"], a.norm)
+        head = params["embed"].T if a.tie_embeddings else params["head"]
+        logits = x @ head
+        if a.softcap_logits is not None:
+            logits = a.softcap_logits * jnp.tanh(logits / a.softcap_logits)
+        return logits, auxes.sum()
+
+    def loss(self, params, batch):
+        a = self.arch
+        logits, aux = self.forward(params, batch)
+        if self.logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, self.logits_sharding)
+        labels = batch["labels"]
+        if a.causal and not a.encoder_only:
+            logits = logits[:, :-1]
+            labels = labels[:, 1:]
+        # vocab-sharding-friendly cross entropy: logsumexp + one-hot gather
+        # (take_along_axis over a sharded V would force an all-gather of the
+        # full logits)
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        sel = labels[..., None] == jnp.arange(a.vocab)[None, None, :]
+        gold = jnp.sum(jnp.where(sel, lf, 0.0), axis=-1)
+        nll = lse - gold
+        return nll.mean() + aux
+
+    def prefill(self, params, batch):
+        """Full-sequence forward returning last-token logits (B, V)."""
+        logits, _ = self.forward(params, batch)
+        return logits[:, -1]
+
+    # ---------------------------------------------------------------- decode
+    def _sub_cache(self, batch: int, max_len: int, sub: SubLayer):
+        a = self.arch
+        if sub.mixer == "rwkv":
+            return rwkv.init_rwkv_state(batch, a.d_model, a.rwkv, self.dtype)
+        if sub.mixer == "mamba":
+            return mamba.init_mamba_state(batch, a.d_model, a.mamba,
+                                          self.dtype)
+        return {"k": jnp.zeros((batch, max_len, a.n_kv, a.hd), self.dtype),
+                "v": jnp.zeros((batch, max_len, a.n_kv, a.hd), self.dtype)}
+
+    def init_cache(self, batch: int, max_len: int):
+        """Stacked decode state: {sub_i: (n_super, ...)}."""
+        out = {}
+        for i, sub in enumerate(self.program):
+            c = self._sub_cache(batch, max_len, sub)
+            out[f"sub{i}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (self.n_super,) + x.shape), c)
+        return out
+
+    def _decode_sub(self, p, x, cch, sub: SubLayer, pos):
+        a = self.arch
+        h = layers.norm(x, p["ln1"], a.norm)
+        if sub.mixer == "rwkv":
+            tm, (tshift, wkv_s) = rwkv.time_mix(
+                p["rwkv"], h, a.rwkv, shift_state=cch["tm_shift"],
+                wkv_state=cch["wkv"])
+            x = x + tm
+            cm, cshift = rwkv.channel_mix(
+                p["rwkv"], layers.norm(x, p["ln2"], a.norm),
+                shift_state=cch["cm_shift"])
+            return x + cm, {"tm_shift": tshift, "cm_shift": cshift,
+                            "wkv": wkv_s}
+        if sub.mixer == "attn":
+            mix, new_c = layers.decode_attention(
+                p["attn"], h, _attn_cfg(a, sub.window), cch, pos)
+        else:
+            mix, new_c = mamba.mamba_decode(p["mamba"], h, cch, a.mamba)
+        x = x + mix
+        h2 = layers.norm(x, p["ln2"], a.norm)
+        if sub.ffn == "moe":
+            ffn, _ = moe.moe_apply(p["moe"], h2, a.moe,
+                                   hidden_sharding=self.moe_hidden_sharding)
+        else:
+            ffn = layers.mlp(p["mlp"], h2, a.act)
+        return x + ffn, new_c
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B, 1); pos scalar int32 -> (logits (B, V), new cache)."""
+        a = self.arch
+        x = params["embed"][tokens]
+        if a.name.startswith("gemma"):
+            x = x * jnp.asarray(a.d_model ** 0.5, x.dtype)
+
+        def body(xc, inp):
+            blk, cch = inp
+            new_cs = {}
+            for i, sub in enumerate(self.program):
+                xc, nc = self._decode_sub(blk[f"sub{i}"], xc,
+                                          cch[f"sub{i}"], sub, pos)
+                new_cs[f"sub{i}"] = nc
+            return xc, new_cs
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        x = layers.norm(x, params["final_norm"], a.norm)
+        head = params["embed"].T if a.tie_embeddings else params["head"]
+        logits = x[:, 0] @ head
+        if a.softcap_logits is not None:
+            logits = a.softcap_logits * jnp.tanh(logits / a.softcap_logits)
+        return logits, new_cache
+
+    # ----------------------------------------------------------------- specs
+    def input_specs(self, shape: ShapeSpec):
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        a = self.arch
+        B, T = shape.global_batch, shape.seq_len
+        f = jnp.bfloat16 if self.dtype == jnp.bfloat16 else jnp.float32
+        if shape.kind in ("train", "prefill"):
+            batch = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+            if a.frontend == "vlm":
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, a.n_patches, a.d_model), f)
+            if a.frontend == "audio":
+                batch["frame_embeds"] = jax.ShapeDtypeStruct(
+                    (B, T, a.d_model), f)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+            return batch
+        cache = jax.eval_shape(lambda: self.init_cache(B, T))
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def count_params(model: Model) -> Tuple[int, int]:
+    """(total, active) parameter counts from the abstract tree.
+
+    Active scales routed-expert weights by top_k / n_experts (MoE cells
+    report MODEL_FLOPS = 6 * N_active * D)."""
+    import numpy as np
+    abstract = model.init_abstract()
+    total = 0
+    active = 0.0
+    a = model.arch
+    for path, leaf in jax.tree_util.tree_flatten_with_path(abstract)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(k, "key", str(k)) for k in path]
+        in_moe = "moe" in keys
+        is_shared = "shared" in keys
+        if in_moe and not is_shared and any(
+                k in ("w_gate", "w_in", "w_out") for k in keys):
+            active += n * (a.moe.top_k / a.moe.n_experts)
+        else:
+            active += n
+    return total, int(active)

@@ -1,0 +1,219 @@
+"""RWKV6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence runs through kernels/ops.wkv6 (Pallas on TPU, scan ref on
+CPU).  Decode carries (token_shift, wkv_state) — O(1) per token, so rwkv6-3b
+runs the long_500k cell natively.
+
+The data-dependent decay follows the Finch structure (low-rank modulation of
+a learned per-channel decay); the ddlerp token-shift interpolation is reduced
+to a single learned mix per projection (documented simplification — the
+computational shape, which is what the roofline sees, is identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+# A/B knob for the §Perf hillclimb: 0 = paper-baseline per-token scan
+_USE_CHUNKED = os.environ.get("REPRO_WKV_CHUNKED", "1") == "1"
+
+from ..kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class RwkvCfg:
+    head_dim: int = 64
+
+    def n_heads(self, d_model):
+        return d_model // self.head_dim
+
+
+def rwkv_params(rng, d_model, d_ff, cfg: RwkvCfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(rng, 10)
+    sc = 1.0 / (d_model ** 0.5)
+    H = cfg.n_heads(d_model)
+    lora = max(d_model // 16, 32)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+        "w_r": (jax.random.normal(ks[0], (d_model, d_model)) * sc).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d_model, d_model)) * sc).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d_model, d_model)) * sc).astype(dtype),
+        "w_o": (jax.random.normal(ks[3], (d_model, d_model)) * sc).astype(dtype),
+        # data-dependent decay: w_t = exp(-exp(decay + lora(x)))
+        "decay": jnp.full((d_model,), -1.0, jnp.float32),
+        "w_dd1": (jax.random.normal(ks[4], (d_model, lora)) * sc).astype(dtype),
+        "w_dd2": (jax.random.normal(ks[5], (lora, d_model)) * 0.1).astype(dtype),
+        "bonus": (0.1 * jax.random.normal(ks[6], (d_model,))).astype(jnp.float32),
+        "ln_x": jnp.zeros((d_model,), dtype),
+        # channel mix
+        "cmix_k": jnp.full((d_model,), 0.5, dtype),
+        "w_ck": (jax.random.normal(ks[7], (d_model, d_ff)) * sc).astype(dtype),
+        "w_cv": (jax.random.normal(ks[8], (d_ff, d_model)) / (d_ff ** 0.5)
+                 ).astype(dtype),
+        "w_cr": (jax.random.normal(ks[9], (d_model, d_model)) * sc).astype(dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """Shift by one token: (B, T, D) -> previous token's activation."""
+    B, T, D = x.shape
+    prev = jnp.zeros((B, 1, D), x.dtype) if last is None else last
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(p, x, cfg: RwkvCfg, shift_state=None, wkv_state=None,
+             head_sharding=None):
+    """x (B, T, D) -> (out, (new_shift, new_wkv)); states enable decode.
+
+    head_sharding: optional NamedSharding for the (B*H, T, K) head tensors.
+    RWKV's 40 heads don't divide the 16-way model axis, so without an
+    explicit reshard GSPMD all-gathers D and every device computes ALL heads
+    (16x redundant WKV).  Pinning the merged B*H dim to (data, model) — 10240
+    % 256 == 0 — runs the WKV fully sharded at the cost of two reshards per
+    layer (§Perf iteration 2 of the rwkv6 hillclimb)."""
+    B, T, D = x.shape
+    H = cfg.n_heads(D)
+    K = cfg.head_dim
+    xs = _token_shift(x, shift_state)
+    def mix(m):
+        return x * m + xs * (1 - m)
+    r = mix(p["mix_r"]) @ p["w_r"]
+    k = mix(p["mix_k"]) @ p["w_k"]
+    v = mix(p["mix_v"]) @ p["w_v"]
+    xw = mix(p["mix_w"]).astype(jnp.float32)
+    dd = (xw @ p["w_dd1"].astype(jnp.float32)) @ p["w_dd2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay"][None, None] + dd))    # (B, T, D) in (0,1)
+
+    def heads(z):
+        zh = z.reshape(B, T, H, K).transpose(0, 2, 1, 3).reshape(B * H, T, K)
+        if head_sharding is not None:
+            zh = jax.lax.with_sharding_constraint(zh, head_sharding)
+        return zh
+    u = p["bonus"].reshape(H, K)
+
+    if wkv_state is None:
+        if _USE_CHUNKED:
+            # train/prefill: chunkwise-parallel WKV (see wkv_chunked)
+            uh = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+            out, _ = wkv_chunked(heads(r), heads(k), heads(v),
+                                 heads(w.astype(x.dtype)), uh,
+                                 jnp.zeros((B * H, K, K), jnp.float32),
+                                 chunk=min(64, T))
+        else:  # baseline: sequential per-token recurrence
+            out, _ = _wkv_with_state(
+                heads(r).astype(jnp.float32), heads(k).astype(jnp.float32),
+                heads(v).astype(jnp.float32),
+                heads(w.astype(jnp.float32)), u,
+                jnp.zeros((B * H, K, K), jnp.float32))
+        new_wkv = None
+    else:
+        out, new_wkv = _wkv_with_state(
+            heads(r).astype(jnp.float32), heads(k).astype(jnp.float32),
+            heads(v).astype(jnp.float32), heads(w.astype(jnp.float32)), u,
+            wkv_state)
+    out = out.reshape(B, H, T, K).transpose(0, 2, 1, 3).reshape(B, T, D)
+    # group-norm-ish scale then output proj
+    out = out * (1.0 + p["ln_x"])
+    out = out.astype(x.dtype) @ p["w_o"]
+    return out, (x[:, -1:], new_wkv)
+
+
+def wkv_chunked(r, k, v, w, u, S0, chunk: int = 64):
+    """Chunkwise-parallel WKV6 (beyond-paper §Perf optimisation).
+
+    The per-token scan costs T sequential state updates — on TPU/XLA each is
+    a fusion boundary that round-trips the (BH, K, V) state through HBM and
+    stacks per-token residuals for backward (the rwkv6 train_4k baseline is
+    memory-bound by ~5 orders of magnitude).  The chunkwise form does
+    T/chunk sequential steps with dense (C x C) MXU matmuls inside:
+
+      L_t   = cumsum(log w) within the chunk         (per channel)
+      r~_j  = r_j * exp(L_{j-1}),  k~_i = k_i * exp(-L_i)
+      intra = ((r~ k~^T) o strict_lower) V + diag(r_j . (u o k_j)) v_j
+      inter = r~ S_0 ;  S_C = diag(exp(L_C)) S_0 + (k~ o exp(L_C))^T V
+
+    The intra-chunk term uses the exact pairwise log-decay differences
+    (L_{j-1} - L_i <= 0 for i < j, so every exp is <= 1 — numerically safe
+    for arbitrarily strong decays; the factored r~ k~ form overflows).  The
+    (C, C, K) pairwise tensor lives only inside the jax.checkpoint'ed chunk
+    body, so backward memory stays O(T/C) states.
+
+    r, k, v, w: (BH, T, K); u: (BH, K) or (K,); S0: (BH, K, K).
+    Returns (out (BH, T, K), S_T)."""
+    BH, T, K = r.shape
+    C = min(chunk, T)
+    assert T % C == 0
+    nch = T // C
+    uh = u if u.ndim == 2 else jnp.broadcast_to(u[None], (BH, K))
+
+    rs = r.reshape(BH, nch, C, K).swapaxes(0, 1).astype(jnp.float32)
+    ks = k.reshape(BH, nch, C, K).swapaxes(0, 1).astype(jnp.float32)
+    vs = v.reshape(BH, nch, C, K).swapaxes(0, 1).astype(jnp.float32)
+    ws = w.reshape(BH, nch, C, K).swapaxes(0, 1).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+
+    @jax.checkpoint
+    def one_chunk(S, xs):
+        rc, kc, vc, wc = xs                       # (BH, C, K)
+        L = jnp.cumsum(jnp.log(jnp.maximum(wc, 1e-30)), axis=1)  # (BH,C,K)
+        Lprev = jnp.concatenate(
+            [jnp.zeros((BH, 1, K), jnp.float32), L[:, :-1]], axis=1)
+        # pairwise decay ratios: exp(L_{j-1} - L_i) for i < j (always <= 1)
+        D = Lprev[:, :, None, :] - L[:, None, :, :]          # (BH, Cj, Ci, K)
+        P = jnp.einsum("bjk,bik,bjik->bji", rc, kc,
+                       jnp.exp(jnp.minimum(D, 0.0))) * mask[None]
+        intra = jnp.einsum("bji,bik->bjk", P, vc)
+        diag = jnp.sum(rc * uh[:, None] * kc, axis=-1, keepdims=True) * vc
+        r_t = rc * jnp.exp(Lprev)                 # <= |r| (safe)
+        inter = jnp.einsum("bik,bkv->biv", r_t, S)
+        out = inter + intra + diag
+        aC = L[:, -1]                             # (BH, K) log total decay
+        kS = kc * jnp.exp(aC[:, None] - L)        # exp(L_C - L_i) <= 1
+        S_new = jnp.exp(aC)[:, :, None] * S + jnp.einsum(
+            "bik,biv->bkv", kS, vc)
+        return S_new, out
+
+    S_T, outs = jax.lax.scan(one_chunk, S0.astype(jnp.float32),
+                             (rs, ks, vs, ws))
+    out = outs.swapaxes(0, 1).reshape(BH, T, K)
+    return out, S_T
+
+
+def _wkv_with_state(r, k, v, w, u, S0):
+    """WKV with explicit initial state (decode path); (BH, T, K) operands."""
+    uh = jnp.repeat(u[None], r.shape[0] // u.shape[0], 0).reshape(
+        r.shape[0], u.shape[1]) if u.ndim == 2 else u
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[:, :, None] * vt[:, None, :]
+        out = (rt[:, :, None] * (S + uh[:, :, None] * kv)).sum(axis=1)
+        return wt[:, :, None] * S + kv, out
+
+    S, out = jax.lax.scan(step, S0,
+                          (r.swapaxes(0, 1), k.swapaxes(0, 1),
+                           v.swapaxes(0, 1), w.swapaxes(0, 1)))
+    return out.swapaxes(0, 1), S
+
+
+def channel_mix(p, x, shift_state=None):
+    xs = _token_shift(x, shift_state)
+    xk = x * p["cmix_k"] + xs * (1 - p["cmix_k"])
+    h = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    r = jax.nn.sigmoid(x @ p["w_cr"])
+    return r * (h @ p["w_cv"]), x[:, -1:]
+
+
+def init_rwkv_state(batch, d_model, cfg: RwkvCfg, dtype=jnp.bfloat16):
+    H = cfg.n_heads(d_model)
+    return {
+        "tm_shift": jnp.zeros((batch, 1, d_model), dtype),
+        "cm_shift": jnp.zeros((batch, 1, d_model), dtype),
+        "wkv": jnp.zeros((batch * H, cfg.head_dim, cfg.head_dim), jnp.float32),
+    }

@@ -1,0 +1,402 @@
+"""Roofline analysis from compiled (SPMD-partitioned) HLO.
+
+This container is CPU-only: the roofline terms are *derived from the compiled
+artifact*, not measured.  Sources and models (EXPERIMENTS.md §Roofline):
+
+  * FLOPs: parsed from `dot`/`convolution` ops in the post-partitioning HLO
+    (2 * prod(output shape) * prod(contracted dims)), with while-loop bodies
+    expanded by their trip counts — `compiled.cost_analysis()` counts loop
+    bodies ONCE (verified empirically), so scanned layer stacks would be
+    undercounted by ~n_layers without this.  Operand shapes are resolved
+    through a per-computation symbol table (optimized HLO does not annotate
+    operand types inline).
+  * bytes: per top-level op (fusion boundaries = memory traffic): sum of
+    operand + result buffer sizes, loop-expanded.  Post-fusion HLO makes this
+    a reasonable HBM-traffic model (intra-fusion temporaries stay in
+    registers/VMEM).
+  * collective bytes (NOT in cost_analysis): per collective op, the wire
+    bytes per participating device: all-reduce 2x (ring RS+AG), all-gather /
+    reduce-scatter / all-to-all / collective-permute 1x buffer size.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute    = FLOPs / (chips * peak)
+  memory     = bytes / (chips * HBM)
+  collective = coll_bytes / (chips * link_bw)     [coll_bytes: per-chip sum]
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_F32 = 98.5e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+# per-collective launch/sync latency (paper §3.3: ~7.5 us per sync+comm+launch
+# on A100+IB; TPU ICI hops are faster — 2 us models dispatch+first-hop)
+COLL_LATENCY = 2e-6
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8\w*|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^=]*\)|tuple\(|[\w\[\]{},]+)\s+)?([a-z][a-z0-9\-]*)\(")
+_CALL_KEYS = ("to_apply", "calls", "condition", "body", "branch_computations")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        d = _DTYPE_BYTES.get(m.group(1), 4)
+        n = 1
+        if m.group(2):
+            for x in m.group(2).split(","):
+                n *= int(x)
+        total += d * n
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if m is None:
+        return None
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+# source tags for byte attribution (matched against op_name metadata);
+# each tag with a Pallas kernel can be analytically substituted in §Perf
+_SOURCE_TAGS = ("wkv", "flash_attention", "mamba", "_ssm_scan", "moe_apply",
+                "block_thomas", "solve_r", "solve_w", "gls_step",
+                "run_external", "horizontal_advdiff", "adamw", "logsumexp")
+
+
+def _source_tag(line: str) -> str:
+    m = re.search(r'op_name="([^"]+)"', line)
+    if not m:
+        return "other"
+    nm = m.group(1)
+    for tag in _SOURCE_TAGS:
+        if tag in nm:
+            return tag
+    return "other"
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_collectives: int = 0
+    bytes_by_source: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add_bytes(self, b: float, tag: str):
+        self.bytes += b
+        self.bytes_by_source[tag] = self.bytes_by_source.get(tag, 0.0) + b
+
+    def add(self, o: "HloStats", f: float = 1.0, include_bytes: bool = True):
+        self.flops += f * o.flops
+        self.coll_bytes += f * o.coll_bytes
+        self.n_collectives += int(f * o.n_collectives)
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + f * v
+        if include_bytes:
+            self.bytes += f * o.bytes
+            for k, v in o.bytes_by_source.items():
+                self.bytes_by_source[k] = self.bytes_by_source.get(k, 0.0) \
+                    + f * v
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.types: Dict[str, str] = {}   # %var -> type string
+
+    def add_line(self, line: str):
+        self.lines.append(line)
+        m = _DEF_RE.match(line)
+        if m:
+            rest = m.group(2)
+            # type string precedes the op name: "f32[2,3]{1,0} dot(...)"
+            tm = _SHAPE_RE.search(rest)
+            if tm is not None:
+                # capture full leading type expr up to the op token
+                opm = re.search(r"\)?\s+[a-z][a-z0-9\-]*\(", rest)
+                tstr = rest[:opm.start() + 1] if opm else rest
+                self.types[m.group(1)] = tstr
+
+
+def _split_computations(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")
+                                or s.startswith("%")):
+            nm = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", s)
+            if nm:
+                cur = _Computation(nm.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            cur.add_line(s)
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    """Names inside the op's (...) argument list."""
+    idx = line.find(f" {op}(")
+    if idx < 0:
+        return []
+    depth = 0
+    args = ""
+    for ch in line[idx + len(op) + 2:]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        args += ch
+    return re.findall(r"%?([\w\.\-]+)", args)
+
+
+def _dot_flops(line: str, comp: _Computation) -> float:
+    out_dims = _first_shape_dims(line.split("=", 1)[1])
+    if out_dims is None:
+        return 0.0
+    ops = _operand_names(line, "dot")
+    if not ops:
+        return 0.0
+    lhs_t = comp.types.get(ops[0])
+    if lhs_t is None:
+        return 0.0
+    lhs_dims = _first_shape_dims(lhs_t)
+    mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if lhs_dims is None or mm is None:
+        return 0.0
+    contract = 1
+    for ci in mm.group(1).split(","):
+        if ci:
+            contract *= lhs_dims[int(ci)]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * contract
+
+
+# ops that represent real memory traffic at fusion granularity. Virtual/
+# layout ops (reshape, bitcast, broadcast, iota, get-tuple-element) and
+# standalone elementwise (always fused on TPU) are excluded.
+_MEM_OPS = ("fusion", "dot", "convolution", "custom-call", "scatter",
+            "gather", "sort", "transpose", "copy",
+            "dynamic-slice", "dynamic-update-slice", "concatenate",
+            "pad", "slice", "select-and-scatter", "reduce-window", "rng",
+            "cholesky", "triangular-solve", "reduce")
+
+
+def _op_bytes(line: str, op: str, comp: _Computation) -> float:
+    """Output + operand buffer bytes (symbol-table resolved)."""
+    out_b = _shape_elems_bytes(line.split("=", 1)[1].split(f" {op}(")[0])
+    in_b = 0
+    for nm in _operand_names(line, op):
+        t = comp.types.get(nm)
+        if t:
+            in_b += _shape_elems_bytes(t)
+    return float(out_b + in_b)
+
+
+def _trip_count(line: str, comps: Dict[str, _Computation]) -> int:
+    m = re.search(r'known_trip_count=\{"?n"?[:=]"?(\d+)"?\}', line)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"trip_count=(\d+)", line)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w\.\-]+)", line)
+    if cm and cm.group(1) in comps:
+        comp = comps[cm.group(1)]
+        consts = []
+        for cl in comp.lines:
+            mm = re.search(r"constant\((\d+)\)", cl)
+            if mm:
+                consts.append(int(mm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def analyze_hlo_text(text: str) -> HloStats:
+    """Aggregate per-device FLOPs/bytes/collective-bytes, loop-expanded."""
+    comps, entry = _split_computations(text)
+    memo: Dict[str, HloStats] = {}
+
+    def visit(name: str, depth: int = 0) -> HloStats:
+        if name in memo:
+            return memo[name]
+        agg = HloStats(coll_by_kind={}, bytes_by_source={})
+        memo[name] = agg
+        if name not in comps or depth > 64:
+            return agg
+        comp = comps[name]
+        for line in comp.lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rest = m.group(2)
+            opm = re.search(r"(?:^|\s)([a-z][a-z0-9\-]*)\(", rest)
+            if opm is None:
+                continue
+            op = opm.group(1)
+            if op == "dot":
+                agg.flops += _dot_flops(line, comp)
+                agg.add_bytes(_op_bytes(line, op, comp), _source_tag(line))
+            elif op == "convolution":
+                out_dims = _first_shape_dims(rest) or []
+                ops_ = _operand_names(line, op)
+                ker = 1
+                if len(ops_) >= 2 and ops_[1] in comp.types:
+                    kd = _first_shape_dims(comp.types[ops_[1]]) or []
+                    for d in kd:
+                        ker *= d
+                out = 1
+                for d in out_dims:
+                    out *= d
+                agg.flops += 2.0 * out * ker
+                agg.add_bytes(_op_bytes(line, op, comp), _source_tag(line))
+            elif any(op.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if op.startswith(c))
+                buf = _shape_elems_bytes(rest.split(f" {op}(")[0])
+                factor = 2.0 if kind == "all-reduce" else 1.0
+                cb = factor * buf
+                agg.coll_bytes += cb
+                agg.n_collectives += 1
+                agg.coll_by_kind[kind] = agg.coll_by_kind.get(kind, 0.0) + cb
+                agg.add_bytes(buf, _source_tag(line))
+            elif op in _MEM_OPS:
+                agg.add_bytes(_op_bytes(line, op, comp), _source_tag(line))
+            # recurse into called computations.  Bytes only flow through
+            # CONTROL-FLOW edges (while bodies/conditions, branches): ops
+            # inside fusion computations live in registers/VMEM — counting
+            # them double-counts the fusion op's operand/result traffic.
+            # FLOPs flow through all edges (a dot inside a fusion is real).
+            mult = _trip_count(line, comps) if "body=" in line else 1
+            for key in _CALL_KEYS:
+                for ref in re.findall(key + r"=\{?%?([\w\.\-]+)", line):
+                    if ref in comps and ref != name:
+                        f = mult if key == "body" else 1
+                        inc_b = key in ("body", "condition",
+                                        "branch_computations")
+                        agg.add(visit(ref, depth + 1), f, include_bytes=inc_b)
+        memo[name] = agg
+        return agg
+
+    return visit(entry) if entry else HloStats(coll_by_kind={},
+                                               bytes_by_source={})
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float      # bandwidth term + latency term
+    flops: float
+    bytes: float
+    coll_bytes: float
+    chips: int
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    coll_bw_s: float = 0.0
+    coll_latency_s: float = 0.0
+    n_collectives: int = 0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Simple no-overlap upper bound = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Useful model throughput vs peak at the modelled step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / self.step_time_s) / (
+            self.chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["step_time_s"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction()
+        return d
+
+
+def roofline_from_stats(stats: HloStats, chips: int,
+                        model_flops: float = 0.0,
+                        peak=PEAK_FLOPS_BF16,
+                        cost_analysis_flops: float = 0.0) -> Roofline:
+    """stats are for the per-device (SPMD) program: flops/bytes are per chip;
+    collective bytes are per-chip wire traffic.
+
+    The compute term takes max(parsed-dot FLOPs, cost_analysis FLOPs): the
+    DG ocean code has no dot ops (elementwise assembly — only cost_analysis
+    sees it, loop-undercounted = lower bound), LM stacks are dot-dominated
+    (cost_analysis misses the x n_layers loop — the parse fixes it).
+    The collective term adds a latency component n_collectives*COLL_LATENCY —
+    the paper's 2D-mode Amdahl wall is latency, not bandwidth."""
+    flops_pc = max(stats.flops, cost_analysis_flops or 0.0)
+    compute = flops_pc / peak
+    memory = stats.bytes / HBM_BW
+    coll_bw = stats.coll_bytes / ICI_BW
+    coll_lat = stats.n_collectives * COLL_LATENCY
+    total_flops = flops_pc * chips
+    return Roofline(
+        compute_s=compute, memory_s=memory,
+        collective_s=coll_bw + coll_lat,
+        flops=total_flops, bytes=stats.bytes * chips,
+        coll_bytes=stats.coll_bytes * chips, chips=chips,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        coll_bw_s=coll_bw, coll_latency_s=coll_lat,
+        n_collectives=stats.n_collectives)
+
+
+def model_flops_estimate(arch, shape, n_total: int, n_active: int) -> float:
+    """MODEL_FLOPS: 6 N D (train), 2 N D (prefill), decode: 2 N B + KV reads."""
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * T
+    if shape.kind == "prefill":
+        return 2.0 * n_active * B * T
+    flops = 2.0 * n_active * B
+    if arch.family not in ("ssm",):
+        n_attn_layers = arch.n_layers if arch.attn_period == 0 else \
+            arch.n_layers // arch.attn_period
+        flops += 4.0 * B * T * n_attn_layers * arch.n_heads * arch.hd
+    return flops

@@ -1,0 +1,37 @@
+"""Recompute the `roofline` section of existing dry-run JSONs after model
+changes (no recompilation needed — raw HLO stats are stored)."""
+import json
+import os
+import sys
+
+from . import analysis
+
+
+def rederive(path: str):
+    with open(path) as f:
+        rec = json.load(f)
+    st = analysis.HloStats(
+        flops=rec["hlo"]["flops"], bytes=rec["hlo"]["bytes"],
+        coll_bytes=rec["hlo"]["coll_bytes"],
+        coll_by_kind=rec["hlo"].get("coll_by_kind", {}),
+        n_collectives=rec["hlo"].get("n_collectives", 0))
+    roof = analysis.roofline_from_stats(
+        st, rec["chips"], rec.get("model_flops", 0.0),
+        cost_analysis_flops=rec.get("cost_analysis", {}).get("flops", 0.0))
+    rec["roofline"] = roof.to_dict()
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(root="experiments/dryrun"):
+    n = 0
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            if fn.endswith(".json"):
+                rederive(os.path.join(dirpath, fn))
+                n += 1
+    print(f"rederived {n} records")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward/
+train step + one decode step on CPU, asserting shapes and finiteness.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+from repro.configs import ALL_ARCHS, get_arch, reduce_arch
+from repro.models.model import Model, count_params
+
+ARCHS = sorted(ALL_ARCHS)
+B, T = 2, 32
+
+
+def make_batch(model, rng):
+    a = model.arch
+    batch = {"tokens": jax.random.randint(rng, (B, T), 0, a.vocab)}
+    if a.frontend == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, a.n_patches, a.d_model), jnp.float32)
+    if a.frontend == "audio":
+        batch["frame_embeds"] = jax.random.normal(
+            rng, (B, T, a.d_model), jnp.float32)
+    batch["labels"] = jax.random.randint(
+        jax.random.fold_in(rng, 1), (B, T), 0, a.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_and_grad(name):
+    arch = reduce_arch(get_arch(name))
+    model = Model(arch, dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(model, jax.random.PRNGKey(1))
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss)), name
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, b: a + float(jnp.abs(b).sum()), grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0, name
+    logits, _ = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, T, arch.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", [n for n in ARCHS
+                                  if not ALL_ARCHS[n].encoder_only])
+def test_decode_step(name):
+    arch = reduce_arch(get_arch(name))
+    model = Model(arch, dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, T)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(model.decode_step)
+    logits, cache = step(params, cache, tok, jnp.int32(0))
+    logits2, cache = step(params, cache, tok, jnp.int32(1))
+    assert logits.shape == (B, arch.vocab)
+    assert bool(jnp.isfinite(logits).all()) and bool(
+        jnp.isfinite(logits2).all()), name
+
+
+@pytest.mark.parametrize("name", [n for n in ARCHS
+                                  if not ALL_ARCHS[n].encoder_only])
+def test_decode_matches_prefill(name):
+    """Token-by-token decode must reproduce the full-sequence forward
+    (validates KV caches, RoPE positions, mamba/rwkv recurrent states)."""
+    arch = reduce_arch(get_arch(name))
+    model = Model(arch, dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(2)
+    toks = jax.random.randint(rng, (B, 8), 0, arch.vocab)
+    batch = {"tokens": toks}
+    if arch.frontend == "vlm":
+        # patch embeds replace the first n_patches positions; zero for parity
+        batch["patch_embeds"] = jnp.zeros((B, arch.n_patches, arch.d_model))
+    logits_full, _ = jax.jit(model.forward)(params, batch)
+    if arch.frontend == "vlm":
+        pytest.skip("vlm decode parity needs patch prefill (covered by shapes)")
+    cache = model.init_cache(B, 8)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(8):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_count_params_moe_active():
+    arch = get_arch("phi3.5-moe-42b-a6.6b")
+    model = Model(arch)
+    total, active = count_params(model)
+    # 42B-ish total, 6.6B-ish active (pool annotation)
+    assert 35e9 < total < 50e9, total
+    assert 5e9 < active < 9e9, active
+
+
+def test_count_params_dense_scales():
+    total, active = count_params(Model(get_arch("mistral-large-123b")))
+    assert 110e9 < total < 135e9, total
+    assert total == active
+    t2, _ = count_params(Model(get_arch("olmo-1b")))
+    assert 0.9e9 < t2 < 1.6e9, t2

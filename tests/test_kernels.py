@@ -1,0 +1,298 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps (per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (cell_transpose, column_solve, flash_attention,
+                           matrix_free, ref, tridiag, wkv6)
+
+
+
+def rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# --- tridiag -----------------------------------------------------------------
+@settings(deadline=None, max_examples=8)
+@given(nl=st.sampled_from([1, 2, 5, 16, 32]), nc=st.sampled_from([128, 256]))
+def test_tridiag_sweep(nl, nc):
+    rng = np.random.default_rng(nl * 1000 + nc)
+    dl = rand(rng, (nl, nc)) * 0.3
+    du = rand(rng, (nl, nc)) * 0.3
+    d = 2.0 + jnp.abs(rand(rng, (nl, nc)))
+    b = rand(rng, (nl, nc))
+    out = tridiag.tridiag_cell(dl, d, du, b, interpret=True)
+    exp = ref.tridiag(dl, d, du, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tridiag_block_cols_variants():
+    rng = np.random.default_rng(0)
+    nl, nc = 8, 512
+    dl = rand(rng, (nl, nc)) * 0.3
+    du = rand(rng, (nl, nc)) * 0.3
+    d = 2.0 + jnp.abs(rand(rng, (nl, nc)))
+    b = rand(rng, (nl, nc))
+    exp = ref.tridiag(dl, d, du, b)
+    for bc in (128, 256, 512):
+        out = tridiag.tridiag_cell(dl, d, du, b, block_cols=bc, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --- matrix-free r/w ---------------------------------------------------------
+@settings(deadline=None, max_examples=8)
+@given(nl=st.sampled_from([1, 3, 8, 32]), nc=st.sampled_from([128, 256]))
+def test_matrix_free_r_sweep(nl, nc):
+    rng = np.random.default_rng(nl + nc)
+    F = rand(rng, (nl * 6, nc))
+    area = jnp.abs(rand(rng, (1, nc))) + 0.5
+    rs = rand(rng, (3, nc))
+    out = matrix_free.solve_r_cell(F, area, rs, interpret=True)
+    exp = ref.solve_r_cell(F, area, rs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(nl=st.sampled_from([1, 3, 8, 32]), nc=st.sampled_from([128, 256]))
+def test_matrix_free_w_sweep(nl, nc):
+    rng = np.random.default_rng(nl + nc + 7)
+    F = rand(rng, (nl * 6, nc))
+    area = jnp.abs(rand(rng, (1, nc))) + 0.5
+    wf = rand(rng, (3, nc))
+    out = matrix_free.solve_w_cell(F, area, wf, interpret=True)
+    exp = ref.solve_w_cell(F, area, wf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_matrix_free_matches_core_solver():
+    """Kernel (cell layout) == core SoA solver on a real mesh."""
+    from repro.core import geometry, layout, mesh2d, vertical
+    m = mesh2d.rect_mesh(8, 8, 1.0, 1.0, jitter=0.2, seed=1)  # nt=128
+    geom = geometry.geom2d_from_mesh(m)
+    nl = 5
+    rng = np.random.default_rng(3)
+    F = rand(rng, (nl, 6, m.nt))
+    rs = rand(rng, (3, m.nt))
+    exp = vertical.solve_r(geom, F, rs)                  # (nl, 6, nt)
+    Fc = layout.soa_to_cell(F)[0]                        # (nl*6, 128)
+    area_c = layout.soa2d_to_cell(geom.area[None])[0]    # (1, 128)
+    rs_c = layout.soa2d_to_cell(rs)[0]                   # (3, 128)
+    out_c = matrix_free.solve_r_cell(Fc, area_c, rs_c, interpret=True)
+    out = layout.cell_to_soa(out_c[None], nl, 6, m.nt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-4)
+
+
+# --- block-tridiagonal column solve ------------------------------------------
+@settings(deadline=None, max_examples=6)
+@given(nl=st.sampled_from([1, 2, 4, 8]), k=st.sampled_from([1, 2]),
+       nc=st.sampled_from([128]))
+def test_block_thomas_sweep(nl, k, nc):
+    rng = np.random.default_rng(nl * 10 + k)
+    mk = lambda: rand(rng, (nl, 6, 6, nc)) * 0.1
+    lo = mk().at[0].set(0.0)
+    up = mk().at[-1].set(0.0)
+    dg = mk() + 2.0 * jnp.eye(6, dtype=jnp.float32)[None, :, :, None]
+    b = rand(rng, (nl, 6, k, nc))
+    out = column_solve.block_thomas_cell(lo, dg, up, b, interpret=True)
+    exp = ref.block_thomas_cell(lo, dg, up, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_block_thomas_residual():
+    """Solution must satisfy the system (independent of the oracle)."""
+    from repro.core.vertical import Blocks, blocks_matvec
+    rng = np.random.default_rng(5)
+    nl, nc = 6, 128
+    mk = lambda: rand(rng, (nl, 6, 6, nc)) * 0.1
+    lo = mk().at[0].set(0.0)
+    up = mk().at[-1].set(0.0)
+    dg = mk() + 2.0 * jnp.eye(6, dtype=jnp.float32)[None, :, :, None]
+    b = rand(rng, (nl, 6, 2, nc))
+    x = column_solve.block_thomas_cell(lo, dg, up, b, interpret=True)
+    xk = jnp.moveaxis(x, 2, 0)
+    resid = jnp.stack([blocks_matvec(Blocks(lo, dg, up), xk[i])
+                       for i in range(2)]) - jnp.moveaxis(b, 2, 0)
+    assert float(jnp.abs(resid).max()) < 1e-3
+
+
+# --- cell transpose ----------------------------------------------------------
+@settings(deadline=None, max_examples=6)
+@given(nl=st.sampled_from([1, 4, 16]), nc=st.sampled_from([1, 2, 5]))
+def test_cell_transpose_roundtrip(nl, nc):
+    nt = nc * 128
+    x = jnp.arange(nl * 6 * nt, dtype=jnp.float32).reshape(nl, 6, nt)
+    c = cell_transpose.soa_to_cell(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(ref.soa_to_cell(x)))
+    back = cell_transpose.cell_to_soa(c, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# --- wkv6 ---------------------------------------------------------------------
+@settings(deadline=None, max_examples=6)
+@given(bh=st.sampled_from([1, 3]), t=st.sampled_from([128, 256]),
+       kd=st.sampled_from([16, 64]))
+def test_wkv6_sweep(bh, t, kd):
+    rng = np.random.default_rng(bh * t + kd)
+    r = rand(rng, (bh, t, kd)) * 0.5
+    k = rand(rng, (bh, t, kd)) * 0.5
+    v = rand(rng, (bh, t, kd)) * 0.5
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(bh, t, kd)) * 0.5 - 1.0))
+                    ).astype(jnp.float32)  # decay in (0, 1)
+    u = rand(rng, (kd,)) * 0.5
+    out = wkv6.wkv6(r, k, v, w, u, t_block=128, interpret=True)
+    exp = ref.wkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_state_carries_across_blocks():
+    """Multi-block T must equal single-block T (state persists in scratch)."""
+    rng = np.random.default_rng(9)
+    r = rand(rng, (2, 256, 32)) * 0.5
+    k = rand(rng, (2, 256, 32)) * 0.5
+    v = rand(rng, (2, 256, 32)) * 0.5
+    w = jnp.full((2, 256, 32), 0.9, jnp.float32)
+    u = rand(rng, (32,))
+    a = wkv6.wkv6(r, k, v, w, u, t_block=128, interpret=True)
+    b = wkv6.wkv6(r, k, v, w, u, t_block=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# --- flash attention ----------------------------------------------------------
+@settings(deadline=None, max_examples=6)
+@given(t=st.sampled_from([128, 256]), d=st.sampled_from([32, 64]),
+       causal=st.booleans())
+def test_flash_attention_sweep(t, d, causal):
+    rng = np.random.default_rng(t + d)
+    q = rand(rng, (2, t, d)) * 0.3
+    k = rand(rng, (2, t, d)) * 0.3
+    v = rand(rng, (2, t, d)) * 0.3
+    out = flash_attention.flash_attention(q, k, v, causal=causal,
+                                          interpret=True)
+    exp = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_window_softcap():
+    rng = np.random.default_rng(11)
+    q = rand(rng, (1, 256, 32)) * 0.5
+    k = rand(rng, (1, 256, 32)) * 0.5
+    v = rand(rng, (1, 256, 32)) * 0.5
+    out = flash_attention.flash_attention(q, k, v, causal=True, window=64,
+                                          softcap=30.0, interpret=True)
+    exp = ref.attention(q, k, v, causal=True, window=64, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_dense():
+    """The XLA fallback (used in the dry-run) must match dense attention."""
+    rng = np.random.default_rng(13)
+    q = rand(rng, (2, 128, 32)) * 0.5
+    k = rand(rng, (2, 512, 32)) * 0.5
+    v = rand(rng, (2, 512, 32)) * 0.5
+    out = ref.chunked_attention(q, k, v, causal=False, chunk=128)
+    exp = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --- custom-VJP flash attention (models/attention.py) --------------------------
+def test_flash_xla_forward_matches_dense():
+    from repro.models.attention import flash_attention_xla
+    rng = np.random.default_rng(21)
+    B, H, T, d = 2, 3, 256, 32
+    q = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    for causal, window, cap in [(True, None, None), (False, None, None),
+                                (True, 64, None), (True, None, 30.0)]:
+        out = flash_attention_xla(q, k, v, causal, window, cap, 64, 128)
+        exp = ref.attention(q.reshape(B * H, T, d), k.reshape(B * H, T, d),
+                            v.reshape(B * H, T, d), causal=causal,
+                            window=window, softcap=cap).reshape(B, H, T, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_flash_xla_gradient_matches_dense():
+    """The custom VJP must match autodiff through the dense reference."""
+    from repro.models.attention import flash_attention_xla
+    rng = np.random.default_rng(22)
+    B, H, T, d = 1, 2, 128, 16
+    q = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    k = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    v = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32)) * 0.5
+    co = jnp.asarray(rng.normal(size=(B, H, T, d)).astype(np.float32))
+
+    for causal, window, cap in [(True, None, None), (True, 32, None),
+                                (True, None, 20.0), (False, None, None)]:
+        def f_flash(q, k, v):
+            return (flash_attention_xla(q, k, v, causal, window, cap,
+                                        32, 64) * co).sum()
+
+        def f_dense(q, k, v):
+            out = ref.attention(q.reshape(B * H, T, d),
+                                k.reshape(B * H, T, d),
+                                v.reshape(B * H, T, d), causal=causal,
+                                window=window, softcap=cap)
+            return (out.reshape(B, H, T, d) * co).sum()
+
+        g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-3, atol=3e-3)
+
+
+def test_wkv_chunked_matches_sequential():
+    """Chunkwise-parallel WKV (the rwkv6 train hillclimb) must match the
+    sequential recurrence, including strong decays where the exp clip binds
+    and a nonzero initial state."""
+    from repro.models.rwkv import wkv_chunked, _wkv_with_state
+    rng = np.random.default_rng(31)
+    BH, T, K = 3, 256, 32
+    r = rand(rng, (BH, T, K)) * 0.5
+    k = rand(rng, (BH, T, K)) * 0.5
+    v = rand(rng, (BH, T, K)) * 0.5
+    # decays incl. extreme channels (w ~ e^-8 per step)
+    logw = -np.exp(rng.normal(size=(BH, T, K)) * 1.5)
+    w = jnp.asarray(np.exp(logw).astype(np.float32))
+    u = rand(rng, (BH, K)) * 0.5
+    S0 = rand(rng, (BH, K, K)) * 0.3
+    out_c, S_c = wkv_chunked(r, k, v, w, u, S0, chunk=64)
+    out_s, S_s = _wkv_with_state(r.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32),
+                                 w.astype(jnp.float32), u,
+                                 S0.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_s),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_wkv_chunked_gradable():
+    from repro.models.rwkv import wkv_chunked
+    rng = np.random.default_rng(32)
+    BH, T, K = 2, 128, 16
+    args = [rand(rng, (BH, T, K)) * 0.5 for _ in range(3)]
+    w = jnp.asarray(np.exp(-np.exp(rng.normal(size=(BH, T, K)) * 0.5)
+                           ).astype(np.float32))
+    u = rand(rng, (BH, K))
+    S0 = jnp.zeros((BH, K, K), jnp.float32)
+    g = jax.grad(lambda r, k, v: wkv_chunked(r, k, v, w, u, S0)[0].sum(),
+                 argnums=(0, 1, 2))(*args)
+    for gi in g:
+        assert bool(jnp.isfinite(gi).all())

@@ -1,0 +1,174 @@
+"""Training substrate tests: optimizer, data, checkpoint, fault tolerance,
+gradient compression."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.data.pipeline import ForcingWindow, TokenDataset, interp_forcing
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import RunnerConfig, TrainRunner
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(1.5)}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = adamw.init(params)
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    l0 = float(loss_fn(params))
+    for _ in range(100):
+        grads = jax.grad(loss_fn)(params)
+        params, state = adamw.update(grads, state, params, cfg)
+    assert float(loss_fn(params)) < 1e-2 * l0
+
+
+def test_adamw_clipping():
+    params = {"w": jnp.asarray([1.0])}
+    state = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    grads = {"w": jnp.asarray([1e6])}
+    p1, _ = adamw.update(grads, state, params, cfg)
+    assert abs(float(p1["w"][0]) - 1.0) < 1.5  # update bounded by lr
+
+def test_token_dataset_deterministic_resume():
+    ds = TokenDataset(vocab=100, seq_len=16, global_batch=4, seed=3)
+    b5 = ds.batch_at(5)
+    b5b = ds.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b5["tokens"]),
+                                  np.asarray(b5b["tokens"]))
+    # labels are next-token shifted
+    ds2 = TokenDataset(vocab=100, seq_len=16, global_batch=4, seed=3)
+    b = ds2.batch_at(0)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+
+
+def test_forcing_window_interpolation():
+    calls = []
+    def provider(k):
+        calls.append(k)
+        return {"f": jnp.full((3,), float(k))}
+    fw = ForcingWindow(provider, dt_window=3600.0, prefetch=False)
+    f0, f1, t0, t1 = fw.at(1800.0)
+    v = interp_forcing(f0["f"], f1["f"], t0, t1, jnp.asarray(1800.0))
+    np.testing.assert_allclose(np.asarray(v), 0.5, rtol=1e-6)
+    # advance two windows
+    f0, f1, t0, t1 = fw.at(2.5 * 3600.0)
+    v = interp_forcing(f0["f"], f1["f"], t0, t1, jnp.asarray(2.5 * 3600.0))
+    np.testing.assert_allclose(np.asarray(v), 2.5, rtol=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray(3), "d": (jnp.ones(4), jnp.zeros(2))}}
+    ck.save(10, tree, blocking=True)
+    ck.save(20, tree, blocking=True)
+    ck.save(30, tree, blocking=True)
+    assert ck.latest_step() == 30
+    # keep_last pruning
+    steps = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(steps) == 2
+    out = ck.restore(tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["d"][0]), np.ones(4))
+
+
+def test_runner_resume_and_crash_recovery(tmp_path):
+    """Runner must checkpoint, survive injected failures by restoring, and
+    resume exactly."""
+    ds = TokenDataset(vocab=10, seq_len=4, global_batch=2, seed=0)
+    fail_at = {7}
+
+    def step_fn(state, batch):
+        step = int(state["step"])
+        if step in fail_at:
+            fail_at.clear()          # fail once
+            raise RuntimeError("injected device failure")
+        return ({"step": state["step"] + 1,
+                 "acc": state["acc"] + float(batch["tokens"].sum())},
+                {"loss": 1.0})
+
+    cfg = RunnerConfig(checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                       max_retries=2)
+    runner = TrainRunner(step_fn, ds, cfg)
+    state = {"step": jnp.asarray(0), "acc": jnp.asarray(0.0)}
+    out = runner.run(state, n_steps=10, resume=False)
+    assert int(out["step"]) == 10
+    assert runner.stats["retries"] == 1
+    # deterministic accumulation despite the crash: recompute reference
+    ref = 0.0
+    for s in range(10):
+        ref += float(ds.batch_at(s)["tokens"].sum())
+    assert abs(float(out["acc"]) - ref) < 1e-6
+
+
+def test_elastic_restore_new_topology(tmp_path):
+    """Checkpoints restore onto a different device layout (subprocess with 8
+    spoofed devices saves; this process (1 device) restores)."""
+    script = f'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpoint import Checkpointer
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh, P("data", None)))
+ck = Checkpointer({str(tmp_path)!r})
+ck.save(5, {{"x": x}}, blocking=True)
+print("SAVED")
+'''
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "HOME": "/root",
+                              "PATH": "/usr/bin:/bin"},
+                         cwd="/root/repo")
+    assert "SAVED" in res.stdout, res.stdout + res.stderr
+    ck = Checkpointer(str(tmp_path))
+    out = ck.restore({"x": jnp.zeros((8, 8))})
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.arange(64.0).reshape(8, 8))
+
+
+def test_compressed_grad_psum_subprocess():
+    """int8 error-feedback DP gradient compression: mean over devices close
+    to f32 all-reduce per step; error feedback keeps cumulative drift small."""
+    script = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim.compression import compressed_grad_psum, init_error_state
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+def f(g, e):
+    m, e2 = compressed_grad_psum({"w": g}, {"w": e}, "data", 8)
+    return m["w"], e2["w"]
+sh = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                   out_specs=(P("data"), P("data")))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.normal(size=(8, 1000)).astype(np.float32))
+e = jnp.zeros((8, 1000), jnp.float32)
+cum_c, cum_t = 0.0, 0.0
+for step in range(20):
+    gs = g * (1.0 + 0.1 * step)
+    mean_c, e = sh(gs, e)
+    true = jnp.broadcast_to(gs.mean(0, keepdims=True), gs.shape)
+    err = float(jnp.abs(mean_c - true).max())
+    scale = float(jnp.abs(true).max())
+    assert err < 0.02 * scale + 1e-6, (step, err, scale)
+print("COMPRESS_OK")
+'''
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "HOME": "/root",
+                              "PATH": "/usr/bin:/bin"},
+                         cwd="/root/repo")
+    assert "COMPRESS_OK" in res.stdout, res.stdout + res.stderr

@@ -1,0 +1,76 @@
+"""GLS turbulence and EOS unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import eos, turbulence
+
+
+def test_thomas_vs_numpy():
+    rng = np.random.default_rng(0)
+    nl, nt = 12, 37
+    dl = jnp.asarray(rng.normal(size=(nl, nt)) * 0.3)
+    du = jnp.asarray(rng.normal(size=(nl, nt)) * 0.3)
+    d = jnp.asarray(2.0 + rng.random((nl, nt)))
+    b = jnp.asarray(rng.normal(size=(nl, nt)))
+    x = turbulence.thomas_solve(dl, d, du, b)
+    for t in range(0, nt, 7):
+        A = np.zeros((nl, nl))
+        for i in range(nl):
+            A[i, i] = d[i, t]
+            if i > 0:
+                A[i, i - 1] = dl[i, t]
+            if i < nl - 1:
+                A[i, i + 1] = du[i, t]
+        xd = np.linalg.solve(A, np.asarray(b[:, t]))
+        np.testing.assert_allclose(np.asarray(x[:, t]), xd, rtol=1e-10)
+
+
+def test_gls_positivity_and_equilibrium():
+    """k and eps stay positive; with strong shear nu_t grows, without it
+    nu_t decays toward background."""
+    nl, nt = 8, 5
+    ts = turbulence.init_turbulence(nl, nt, jnp.float64)
+    dz = jnp.full((1, nt), 2.0)
+    m2 = jnp.full((nl, nt), 1e-4)   # shear
+    n2 = jnp.zeros((nl, nt))
+    for _ in range(50):
+        ts = turbulence.gls_step(ts, m2, n2, dz, dt=30.0)
+        assert float(ts.k.min()) > 0
+        assert float(ts.eps.min()) > 0
+    nu_sheared = float(ts.nu_t.mean())
+    ts2 = turbulence.init_turbulence(nl, nt, jnp.float64)
+    for _ in range(50):
+        ts2 = turbulence.gls_step(ts2, jnp.zeros((nl, nt)), n2, dz, dt=30.0)
+    assert nu_sheared > 10 * float(ts2.nu_t.mean())
+
+
+def test_gls_stable_stratification_suppresses_mixing():
+    nl, nt = 8, 3
+    dz = jnp.full((1, nt), 2.0)
+    m2 = jnp.full((nl, nt), 1e-4)
+    def run(n2val):
+        ts = turbulence.init_turbulence(nl, nt, jnp.float64)
+        for _ in range(50):
+            ts = turbulence.gls_step(ts, m2, jnp.full((nl, nt), n2val), dz, 30.0)
+        return float(ts.nu_t.mean())
+    assert run(1e-3) < run(0.0)
+
+
+def test_jackett_reference_values():
+    """Sanity: fresh cold water ~ 1000; standard seawater ~ 1027-1028 at
+    surface; density increases with S, decreases with T, increases with p."""
+    r0 = float(eos.rho_jackett(jnp.asarray(0.0), jnp.asarray(5.0), jnp.asarray(0.0)))
+    assert abs(r0 - 1000.0) < 0.2
+    r35 = float(eos.rho_jackett(jnp.asarray(35.0), jnp.asarray(10.0), jnp.asarray(0.0)))
+    assert 1026.0 < r35 < 1028.0
+    assert float(eos.rho_jackett(jnp.asarray(36.0), jnp.asarray(10.0), jnp.asarray(0.0))) > r35
+    assert float(eos.rho_jackett(jnp.asarray(35.0), jnp.asarray(15.0), jnp.asarray(0.0))) < r35
+    assert float(eos.rho_jackett(jnp.asarray(35.0), jnp.asarray(10.0), jnp.asarray(1000.0))) > r35
+
+
+def test_linear_eos():
+    r = eos.rho_prime(jnp.asarray(35.0), jnp.asarray(12.0), None, "linear")
+    np.testing.assert_allclose(float(r), -0.2 * 2.0, rtol=1e-12)

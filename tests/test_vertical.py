@@ -1,0 +1,238 @@
+"""Column solver tests: matrix-free r/w solvers vs dense D_vu/D_vd assembly,
+block-Thomas vs dense solve, mass blocks consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import geometry, mesh2d, vertical
+
+NL = 5
+
+
+@pytest.fixture(scope="module")
+def geom():
+    m = mesh2d.rect_mesh(4, 3, 1.0, 1.0, jitter=0.2, seed=5)
+    return geometry.geom2d_from_mesh(m, dtype=jnp.float64)
+
+
+def mh_dense(geom):
+    """(nt, 3, 3) P1 mass matrices."""
+    A = np.asarray(geom.area)
+    base = np.array([[2.0, 1, 1], [1, 2, 1], [1, 1, 2]]) / 12.0
+    return A[:, None, None] * base
+
+
+def dvu_dense(geom, nl):
+    """Paper §2.3 D_vu (pressure gradient, top-down), (nt, 6nl, 6nl).
+
+    Rows (l,t): M r_b^{l-1} - (M/2)(r_t^l + r_b^l)   [l=0: BC term to RHS]
+    Rows (l,b): (M/2)(r_t^l - r_b^l)
+    """
+    Mh = mh_dense(geom)
+    nt = Mh.shape[0]
+    n = 6 * nl
+    A = np.zeros((nt, n, n))
+    for l in range(nl):
+        t = slice(6 * l, 6 * l + 3)
+        b = slice(6 * l + 3, 6 * l + 6)
+        A[:, t, t] += -0.5 * Mh
+        A[:, t, b] += -0.5 * Mh
+        A[:, b, t] += 0.5 * Mh
+        A[:, b, b] += -0.5 * Mh
+        if l > 0:
+            bp = slice(6 * (l - 1) + 3, 6 * (l - 1) + 6)
+            A[:, t, bp] += Mh
+    return A
+
+
+def dvd_dense(geom, nl):
+    """Paper §2.3 D_vd (vertical velocity, bottom-up).
+
+    Rows (l,t): (M/2)(w_t^l - w_b^l)
+    Rows (l,b): (M/2)(w_t^l + w_b^l) - M w_t^{l+1}  [l=nl-1: BC to RHS]
+    """
+    Mh = mh_dense(geom)
+    nt = Mh.shape[0]
+    n = 6 * nl
+    A = np.zeros((nt, n, n))
+    for l in range(nl):
+        t = slice(6 * l, 6 * l + 3)
+        b = slice(6 * l + 3, 6 * l + 6)
+        A[:, t, t] += 0.5 * Mh
+        A[:, t, b] += -0.5 * Mh
+        A[:, b, t] += 0.5 * Mh
+        A[:, b, b] += 0.5 * Mh
+        if l < nl - 1:
+            tn = slice(6 * (l + 1), 6 * (l + 1) + 3)
+            A[:, b, tn] += -Mh
+    return A
+
+
+def test_solve_r_vs_dense(geom):
+    nt = geom.nt
+    rng = np.random.default_rng(0)
+    F = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    r_surf = jnp.asarray(rng.normal(size=(3, nt)))
+    r = vertical.solve_r(geom, F, r_surf)
+    # dense: rows (0,t) RHS must subtract the surface term  M r_s
+    Mh = mh_dense(geom)
+    Fd = np.moveaxis(np.asarray(F).reshape(NL * 6, nt), -1, 0).copy()
+    Fd[:, 0:3] -= np.einsum("tij,tj->ti", Mh, np.asarray(r_surf).T)
+    A = dvu_dense(geom, NL)
+    x = np.linalg.solve(A, Fd[..., None])[..., 0]
+    np.testing.assert_allclose(
+        np.asarray(r).reshape(NL * 6, nt).T, x, rtol=1e-9, atol=1e-10)
+
+
+def test_solve_w_vs_dense(geom):
+    nt = geom.nt
+    rng = np.random.default_rng(1)
+    F = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    w_floor = jnp.asarray(rng.normal(size=(3, nt)))
+    w = vertical.solve_w(geom, F, w_floor)
+    Mh = mh_dense(geom)
+    Fd = np.moveaxis(np.asarray(F).reshape(NL * 6, nt), -1, 0).copy()
+    # rows (nl-1, b): RHS gets + M w_floor
+    Fd[:, 6 * (NL - 1) + 3:6 * NL] += np.einsum(
+        "tij,tj->ti", Mh, np.asarray(w_floor).T)
+    A = dvd_dense(geom, NL)
+    x = np.linalg.solve(A, Fd[..., None])[..., 0]
+    np.testing.assert_allclose(
+        np.asarray(w).reshape(NL * 6, nt).T, x, rtol=1e-9, atol=1e-10)
+
+
+def test_solve_r_vector_components(geom):
+    """r solver must broadcast over leading component axes."""
+    nt = geom.nt
+    rng = np.random.default_rng(2)
+    F = jnp.asarray(rng.normal(size=(2, NL, 6, nt)))
+    rs = jnp.asarray(rng.normal(size=(2, 3, nt)))
+    r = vertical.solve_r(geom, F, rs)
+    r0 = vertical.solve_r(geom, F[0], rs[0])
+    np.testing.assert_allclose(np.asarray(r[0]), np.asarray(r0), rtol=1e-12)
+
+
+@pytest.fixture(scope="module")
+def random_blocks(geom):
+    """A well-conditioned random block-tridiagonal operator."""
+    rng = np.random.default_rng(3)
+    nt = geom.nt
+    mk = lambda: jnp.asarray(0.1 * rng.normal(size=(NL, 6, 6, nt)))
+    lo = mk().at[0].set(0.0)
+    up = mk().at[-1].set(0.0)
+    dg = mk() + 2.0 * jnp.eye(6)[None, :, :, None]
+    return vertical.Blocks(lo=lo, dg=dg, up=up)
+
+
+def test_block_thomas_vs_dense(geom, random_blocks):
+    nt = geom.nt
+    rng = np.random.default_rng(4)
+    rhs = jnp.asarray(rng.normal(size=(2, NL, 6, nt)))
+    x = vertical.block_thomas_solve(random_blocks, rhs)
+    A = np.asarray(vertical.blocks_dense(random_blocks))
+    bd = np.moveaxis(np.asarray(rhs).reshape(2, NL * 6, nt), -1, 0)  # (nt,2,6nl)
+    xd = np.linalg.solve(A[:, None], bd[..., None])[..., 0]          # (nt,2,6nl)
+    np.testing.assert_allclose(
+        np.moveaxis(np.asarray(x).reshape(2, NL * 6, nt), -1, 0), xd,
+        rtol=1e-8, atol=1e-9)
+
+
+def test_blocks_matvec_vs_dense(geom, random_blocks):
+    nt = geom.nt
+    rng = np.random.default_rng(5)
+    u = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    y = vertical.blocks_matvec(random_blocks, u)
+    A = np.asarray(vertical.blocks_dense(random_blocks))
+    yd = np.einsum("tij,tj->ti", A, np.asarray(u).reshape(NL * 6, nt).T)
+    np.testing.assert_allclose(np.asarray(y).reshape(NL * 6, nt).T, yd,
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_mass_blocks_and_solve(geom):
+    nt = geom.nt
+    rng = np.random.default_rng(6)
+    jz = jnp.asarray(1.0 + 0.3 * rng.random(size=(3, nt)))
+    u = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    mb = vertical.mass_blocks(geom, jz, NL)
+    mu1 = jnp.einsum("lijt,ljt->lit", mb, u)
+    mu2 = vertical.mass_apply3d(geom, jz, u)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu2),
+                               rtol=1e-10, atol=1e-12)
+    back = vertical.mass_solve3d(geom, jz, mu2)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(u),
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_mass_total_volume(geom):
+    """sum over all DOFs of M@1 = total volume = sum(2*A*jz_mean*nl)."""
+    nt = geom.nt
+    jz = jnp.full((3, nt), 0.5)
+    one = jnp.ones((NL, 6, nt))
+    tot = float(vertical.mass_apply3d(geom, jz, one).sum())
+    # each prism: volume = integral Jh*Jz over parent = 2A*jz ; nl layers
+    expect = float((2 * geom.area * 0.5).sum()) * NL
+    np.testing.assert_allclose(tot, expect, rtol=1e-10)
+
+
+def test_assembled_operator_conservation(geom):
+    """The advective part of the vertical operator must telescope: summing
+    F_3D^v(u) over all vertical DOFs of a column leaves only surface/floor
+    fluxes (which vanish when wface=0 there) — discrete conservation."""
+    nt = geom.nt
+    rng = np.random.default_rng(7)
+    jz = jnp.asarray(0.4 + 0.2 * rng.random(size=(3, nt)))
+    H = jz * 2 * NL
+    wrel = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    wface = jnp.asarray(rng.normal(size=(NL + 1, 3, nt)))
+    wface = wface.at[0].set(0.0).at[NL].set(0.0)
+    kappa = jnp.zeros((NL, 6, nt))  # pure advection
+    blocks = vertical.assemble_vertical_operator(
+        geom, NL, jz, wrel, wface, kappa, H)
+    u = jnp.ones((NL, 6, nt))  # constant field
+    y = vertical.blocks_matvec(blocks, u)
+    # For u=const the face fluxes telescope; the volume term integrates
+    # d(phi)/dz of a constant... sum over vertical DOFs must be 0
+    tot = y[:, 0:3, :].sum(axis=0) + y[:, 3:6, :].sum(axis=0)
+    np.testing.assert_allclose(np.asarray(tot), 0.0, atol=1e-10)
+
+
+def test_viscous_operator_symmetric_negative(geom):
+    """Pure vertical viscosity (no advection): the operator restricted to a
+    column must be dissipative: u^T A u <= 0 for the viscous part."""
+    nt = geom.nt
+    rng = np.random.default_rng(8)
+    jz = jnp.asarray(0.4 + 0.2 * rng.random(size=(3, nt)))
+    H = jz * 2 * NL
+    wrel = jnp.zeros((NL, 6, nt))
+    wface = jnp.zeros((NL + 1, 3, nt))
+    kappa = jnp.asarray(0.01 + 0.005 * rng.random(size=(NL, 6, nt)))
+    blocks = vertical.assemble_vertical_operator(
+        geom, NL, jz, wrel, wface, kappa, H)
+    u = jnp.asarray(rng.normal(size=(NL, 6, nt)))
+    y = vertical.blocks_matvec(blocks, u)
+    energy = float((u * y).sum())
+    assert energy < 0.0
+
+
+def test_implicit_solve_system(geom):
+    """(M - dt A) u1 = M u0: u1 must satisfy the system (round-trip)."""
+    nt = geom.nt
+    rng = np.random.default_rng(9)
+    jz = jnp.asarray(0.4 + 0.2 * rng.random(size=(3, nt)))
+    H = jz * 2 * NL
+    wrel = jnp.asarray(0.1 * rng.normal(size=(NL, 6, nt)))
+    wface = 0.1 * jnp.asarray(rng.normal(size=(NL + 1, 3, nt)))
+    wface = wface.at[0].set(0.0).at[NL].set(0.0)
+    kappa = jnp.asarray(0.01 * (1 + rng.random(size=(NL, 6, nt))))
+    A = vertical.assemble_vertical_operator(geom, NL, jz, wrel, wface, kappa, H)
+    M = vertical.mass_blocks(geom, jz, NL)
+    dt = 0.5
+    sys = vertical.Blocks(lo=-dt * A.lo, dg=M - dt * A.dg, up=-dt * A.up)
+    u0 = jnp.asarray(rng.normal(size=(2, NL, 6, nt)))
+    rhs = jnp.stack([vertical.mass_apply3d(geom, jz, u0[i]) for i in range(2)])
+    u1 = vertical.block_thomas_solve(sys, rhs)
+    resid = jnp.stack([vertical.blocks_matvec(sys, u1[i]) for i in range(2)]) - rhs
+    np.testing.assert_allclose(np.asarray(resid), 0.0, atol=1e-9)
