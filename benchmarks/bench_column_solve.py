@@ -1,0 +1,84 @@
+"""Ref vs Pallas cell-layout column solvers across layer counts (paper
+Fig. 15 axis): block-Thomas (implicit momentum/tracer, §2.4) and the
+matrix-free r/w sweeps (§2.3) for nl in {4, 8, 16, 32} at several column
+counts.
+
+On CPU the Pallas side runs interpreted — roughly ref-speed for these
+kernels (the unrolled 6x6 elimination competes with batched linalg.solve),
+so the CPU rows sanity-check plumbing and relative nl scaling; on TPU both
+sides are compiled and the comparison is the paper's actual experiment.
+Output rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.vertical import Blocks, block_thomas_solve
+from repro.kernels import column_solve, dispatch, matrix_free
+from repro.kernels import ref as kref
+
+from .common import row, time_fn
+
+LAYERS = [4, 8, 16, 32]
+COLUMNS = [1024, 8192]
+
+
+def _blocks(rng, nl, C, dtype=np.float32):
+    mk = lambda: jnp.asarray(
+        rng.normal(size=(nl, 6, 6, C)).astype(dtype)) * 0.1
+    lo = mk().at[0].set(0.0)
+    up = mk().at[-1].set(0.0)
+    dg = mk() + 2.0 * jnp.eye(6, dtype=dtype)[None, :, :, None]
+    b = jnp.asarray(rng.normal(size=(nl, 6, 2, C)).astype(dtype))
+    return lo, dg, up, b
+
+
+def run(columns=COLUMNS, layers=LAYERS):
+    interp = dispatch.interpret_default()
+    mode = "interpret" if interp else "compiled"
+    rng = np.random.default_rng(0)
+
+    for C in columns:
+        for nl in layers:
+            lo, dg, up, b = _blocks(rng, nl, C)
+
+            # ref: the scanned jnp block-Thomas on (k, nl, 6, nt) shapes
+            rhs = jnp.moveaxis(b, 2, 0)
+            f_ref = jax.jit(lambda l, d, u, r: block_thomas_solve(
+                Blocks(l, d, u), r))
+            t_ref = time_fn(f_ref, lo, dg, up, rhs, warmup=1, iters=3)
+
+            f_pal = lambda *a: column_solve.block_thomas_cell(
+                *a, interpret=interp)
+            t_pal = time_fn(f_pal, lo, dg, up, b, warmup=1, iters=3)
+
+            n_sys = C * 2
+            row(f"block_thomas_nl{nl}_C{C}_ref", t_ref * 1e6,
+                f"ns_per_column_solve={t_ref / n_sys * 1e9:.1f}")
+            row(f"block_thomas_nl{nl}_C{C}_pallas_{mode}", t_pal * 1e6,
+                f"ns_per_column_solve={t_pal / n_sys * 1e9:.1f};"
+                f"speedup_vs_ref={t_ref / t_pal:.2f}x")
+
+        for nl in layers:
+            F = jnp.asarray(rng.normal(size=(nl * 6, C)).astype(np.float32))
+            area = jnp.abs(
+                jnp.asarray(rng.normal(size=(1, C)).astype(np.float32))) + 0.5
+            bc = jnp.asarray(rng.normal(size=(3, C)).astype(np.float32))
+
+            sweeps = [("r", kref.solve_r_cell, matrix_free.solve_r_cell),
+                      ("w", kref.solve_w_cell, matrix_free.solve_w_cell)]
+            for name, f_ref_raw, f_pal_raw in sweeps:
+                f_ref = jax.jit(f_ref_raw)
+                t_ref = time_fn(f_ref, F, area, bc, warmup=1, iters=3)
+                f_pal = lambda *a, _f=f_pal_raw: _f(*a, interpret=interp)
+                t_pal = time_fn(f_pal, F, area, bc, warmup=1, iters=3)
+                row(f"matrix_free_{name}_nl{nl}_C{C}_ref", t_ref * 1e6,
+                    f"GBps={2 * F.size * 4 / t_ref / 1e9:.2f}")
+                row(f"matrix_free_{name}_nl{nl}_C{C}_pallas_{mode}",
+                    t_pal * 1e6, f"speedup_vs_ref={t_ref / t_pal:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

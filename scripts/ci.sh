@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the suite must COLLECT (10 modules, zero import errors —
+# catching missing-optional-dependency regressions like the hypothesis one)
+# and PASS on a bare jax+pytest environment, within a time budget.
+#
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+BUDGET="${CI_TIME_BUDGET_S:-2400}"
+
+# collection gate: any import error fails fast and loudly
+timeout 300 python -m pytest -q --collect-only >/dev/null
+
+# the tier-1 command from ROADMAP.md, under the time budget
+exec timeout "$BUDGET" python -m pytest -x -q "$@"

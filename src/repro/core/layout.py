@@ -63,6 +63,29 @@ def cell_to_soa(x: jax.Array, nl: int, nn: int, nt: int,
     return x[..., :nt]
 
 
+def blocks_to_cell(blk: jax.Array, cell: int = CELL) -> jax.Array:
+    """Operator blocks (..., nl, 6, 6, nt) -> (..., nc, nl, 6, 6, cell).
+
+    The per-cell operand layout of the paper's column solver (§2.4): each
+    cell holds the 6x6 blocks of its 128 columns in the lane dimension.  The
+    Pallas kernel consumes the flat lane view (nl, 6, 6, nc*cell) — identical
+    bytes, cells walked by the grid — so this explicit form is for step-
+    boundary storage and tests."""
+    blk = pad_nt(blk, cell)
+    *lead, nl, a, b, nt = blk.shape
+    nc = nt // cell
+    blk = blk.reshape(*lead, nl, a, b, nc, cell)
+    return jnp.moveaxis(blk, -2, -5)
+
+
+def cell_to_blocks(blk: jax.Array, nt: int, cell: int = CELL) -> jax.Array:
+    """Inverse of blocks_to_cell; slices padding back off to nt."""
+    *lead, nc, nl, a, b, c = blk.shape
+    assert c == cell
+    blk = jnp.moveaxis(blk, -5, -2).reshape(*lead, nl, a, b, nc * cell)
+    return blk[..., :nt]
+
+
 def soa2d_to_cell(x: jax.Array, cell: int = CELL) -> jax.Array:
     """2D nodal field (..., 3, nt) -> (..., nc, 3, cell)."""
     x = pad_nt(x, cell)

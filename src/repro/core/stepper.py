@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import dg2d, dg3d, eos, turbulence, vertical
 from . import geometry as G
+from ..kernels import ops as kops
 from .dg2d import Forcing2D, State2D
 from .extrusion import (VGrid, expand2d, layer_geometry, mesh_velocity,
                         node_z, vsum_dofs)
@@ -46,6 +47,10 @@ class OceanConfig:
     kappa_v_bg: float = 1e-5
     use_gls: bool = True
     halo_exchange_period: int = 0  # 0: per 2D RK stage; j>0: every j substeps
+    backend: str = "auto"        # column-solver backend (kernels/dispatch.py):
+                                 # ref | pallas_interpret | pallas | auto
+                                 # (auto: pallas on TPU, interpret on CPU,
+                                 #  ref on other accelerators)
 
 
 @jax.tree_util.register_dataclass
@@ -161,7 +166,7 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     # --- density, pressure gradient r (matrix-free solve) -------------------
     rho = eos.rho_prime(S_e, T_e, _pressure_dbar(vg, vgee), cfg.eos_kind)
     F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho)
-    r = vertical.solve_r(geom, F_r, r_s)                 # (2, nl, 6, nt)
+    r = kops.solve_r(geom, F_r, r_s, backend=cfg.backend)  # (2, nl, 6, nt)
 
     # --- component 1: horizontal flux prediction (with q, not qbar) ---------
     q = dg3d.transport_from_velocity(vgee, ux_e, uy_e)
@@ -214,8 +219,9 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     else:
         flux_c = dg3d.lateral_flux_speed(
             geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b, h_min=cfg.h_min)
-    w_t = vertical.solve_w(
-        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c))
+    w_t = kops.solve_w(
+        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c),
+        backend=cfg.backend)
 
     wm_i = mesh_velocity(vg, st0.ext.eta, eta1, dtau)    # (nl+1, 3, nt)
     wm_nodes = jnp.concatenate([wm_i[:-1], wm_i[1:]], axis=1)
@@ -245,10 +251,12 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     A_u = vertical.assemble_vertical_operator(
         geom, nl, vgee.jz, wrel, wface, kv, vgee.H, drag_coeff=drag)
     if implicit:
+        # assemble (M - dt A) and solve both velocity components in one
+        # cell-layout sweep: the lane axis is the cell column axis, so the
+        # blocks go to the kernel as assembled — no SoA<->cell round-trip
         M1b = vertical.mass_blocks(geom, vge1.jz, nl)
-        sys = vertical.Blocks(lo=-dtau * A_u.lo, dg=M1b - dtau * A_u.dg,
-                              up=-dtau * A_u.up)
-        u1 = vertical.block_thomas_solve(sys, rhs_u)
+        sys = vertical.implicit_system(M1b, A_u, dtau)
+        u1 = kops.block_thomas(sys, rhs_u, backend=cfg.backend)
     else:
         f3v = jnp.stack([vertical.blocks_matvec(A_u, ux_e),
                          vertical.blocks_matvec(A_u, uy_e)])
@@ -272,9 +280,8 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
         geom, nl, vgee.jz, wrel, wface, kap, vgee.H, drag_coeff=None)
     if implicit:
         M1b = vertical.mass_blocks(geom, vge1.jz, nl)
-        sysT = vertical.Blocks(lo=-dtau * A_tr.lo, dg=M1b - dtau * A_tr.dg,
-                               up=-dtau * A_tr.up)
-        tr1 = vertical.block_thomas_solve(sysT, rhs_tr)
+        sysT = vertical.implicit_system(M1b, A_tr, dtau)
+        tr1 = kops.block_thomas(sysT, rhs_tr, backend=cfg.backend)
     else:
         f3v_tr = jnp.stack([vertical.blocks_matvec(A_tr, T_e),
                             vertical.blocks_matvec(A_tr, S_e)])
@@ -292,6 +299,23 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
 
     return StageOut(ext=ext.state, ux=u1[0], uy=u1[1], T=tr1[0], S=tr1[1],
                     turb=turb1, r=r, w_tilde=w_t)
+
+
+def state_to_cell(st: OceanState, backend: Optional[str] = None) -> dict:
+    """Cell-layout (nc, nl*6, 128) copies of the 3D prognostic fields via the
+    cell_transpose kernel — the step-boundary transform (paper §2.1.2) for
+    cell-major storage/IO.  Inside a step everything already runs in lane
+    (=cell column) layout, so this is the only SoA<->cell transpose."""
+    f = lambda x: kops.soa_to_cell(x, backend=backend)
+    return {"ux": f(st.ux), "uy": f(st.uy), "T": f(st.T), "S": f(st.S)}
+
+
+def state_from_cell(st: OceanState, cells: dict, nt: int,
+                    backend: Optional[str] = None) -> OceanState:
+    """Rebuild the SoA prognostic fields from state_to_cell output."""
+    f = lambda x: kops.cell_to_soa(x, nt, backend=backend)
+    return dataclasses.replace(st, ux=f(cells["ux"]), uy=f(cells["uy"]),
+                               T=f(cells["T"]), S=f(cells["S"]))
 
 
 def step(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st: OceanState,

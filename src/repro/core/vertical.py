@@ -260,6 +260,16 @@ def assemble_vertical_operator(
     return Blocks(lo=lo, dg=dg, up=up)
 
 
+def implicit_system(M_blocks: jax.Array, A: Blocks, dtau: float) -> Blocks:
+    """The vertically-implicit system (M - dt A) as Blocks.
+
+    M_blocks: (nl, 6, 6, nt) mass blocks at the end-of-stage geometry;
+    A: the assembled F_3D^v operator.  Used by both the SoA reference solve
+    and the cell-layout Pallas path (kernels/ops.block_thomas)."""
+    return Blocks(lo=-dtau * A.lo, dg=M_blocks - dtau * A.dg,
+                  up=-dtau * A.up)
+
+
 def blocks_matvec(blocks: Blocks, u: jax.Array) -> jax.Array:
     """Apply the block-tridiagonal operator: u (..., nl, 6, nt)."""
     lo, dg, up = blocks

@@ -9,6 +9,7 @@ or a 512-chip double pod.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Sequence
 
@@ -30,6 +31,16 @@ class DistributedOcean:
                  cfg: stepper.OceanConfig, device_mesh: jax.sharding.Mesh,
                  axes: Sequence[str], halo_depth: Optional[int] = None,
                  dtype=jnp.float32):
+        # the shard_map'd local step runs on halo-extended partitions whose
+        # local nt varies per rank; pin the column solves to the jnp
+        # reference there (the Pallas path is exercised — and equivalence-
+        # tested — on the single-device stepper, kernels/dispatch.py)
+        if cfg.backend not in ("auto", "ref"):
+            warnings.warn(
+                f"DistributedOcean: backend={cfg.backend!r} is not supported "
+                "in the shard_map'd local step; falling back to 'ref' for "
+                "the distributed column solves.", stacklevel=2)
+        cfg = dataclasses.replace(cfg, backend="ref")
         self.cfg = cfg
         self.device_mesh = device_mesh
         self.axes = tuple(axes)

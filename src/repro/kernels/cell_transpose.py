@@ -7,14 +7,21 @@ transform is a per-cell reshape: SoA (nl, 6, nt) slabs of 128 columns become
 rows, so the kernel is a pure streaming copy — the roofline expectation is
 memory-term-bound at ~2x the array footprint, which is what the §Perf
 analysis of the lowered HLO shows.
+
+nt need not be a multiple of 128: soa_to_cell zero-pads the column axis up
+to the cell width (layout.pad_nt) and cell_to_soa slices back when given the
+original nt.  interpret=None auto-selects per platform (dispatch).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import dispatch
 
 CELL = 128
 
@@ -31,10 +38,14 @@ def _from_cell_kernel(x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def soa_to_cell(x: jax.Array, interpret: bool = True) -> jax.Array:
-    """(nl, 6, nt) -> (nt/128, nl*6, 128); nt % 128 == 0."""
+def soa_to_cell(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    """(nl, 6, nt) -> (ceil(nt/128), nl*6, 128); pads nt up to the cell."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
+    from ..core.layout import pad_nt
+    x = pad_nt(x, CELL)
     nl, six, nt = x.shape
-    assert six == 6 and nt % CELL == 0
+    assert six == 6
     nc = nt // CELL
     return pl.pallas_call(
         _to_cell_kernel,
@@ -46,13 +57,16 @@ def soa_to_cell(x: jax.Array, interpret: bool = True) -> jax.Array:
     )(x)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cell_to_soa(x: jax.Array, interpret: bool = True) -> jax.Array:
-    """(nc, nl*6, 128) -> (nl, 6, nc*128)."""
+@functools.partial(jax.jit, static_argnames=("nt", "interpret"))
+def cell_to_soa(x: jax.Array, nt: Optional[int] = None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """(nc, nl*6, 128) -> (nl, 6, nt); nt defaults to nc*128 (no padding)."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
     nc, rows, c = x.shape
     assert c == CELL and rows % 6 == 0
     nl = rows // 6
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _from_cell_kernel,
         grid=(nc,),
         in_specs=[pl.BlockSpec((1, rows, CELL), lambda i: (i, 0, 0))],
@@ -60,3 +74,6 @@ def cell_to_soa(x: jax.Array, interpret: bool = True) -> jax.Array:
         out_shape=jax.ShapeDtypeStruct((nl, 6, nc * CELL), x.dtype),
         interpret=interpret,
     )(x)
+    if nt is not None and nt != nc * CELL:
+        out = out[..., :nt]
+    return out

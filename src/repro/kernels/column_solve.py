@@ -23,11 +23,14 @@ VMEM budget per grid step (nl=32, k=2, BC=128, f32):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import dispatch
 
 
 def _mm6(A, B):
@@ -86,18 +89,35 @@ def _block_thomas_kernel(lo_ref, dg_ref, up_ref, b_ref, x_ref, C_ref):
 @functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
 def block_thomas_cell(lo: jax.Array, dg: jax.Array, up: jax.Array,
                       b: jax.Array, block_cols: int = 128,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: Optional[bool] = None) -> jax.Array:
     """Solve block-tridiagonal systems in cell layout.
 
     lo, dg, up: (nl, 6, 6, C); b: (nl, 6, k, C); returns x: (nl, 6, k, C).
-    lo[0] and up[nl-1] are ignored (set to 0 by the assembler)."""
+    lo[0] and up[nl-1] are ignored (set to 0 by the assembler).
+
+    C need not be a multiple of block_cols: ragged tails are padded with
+    identity diagonal blocks and zero RHS (solution 0 in the pad lanes) and
+    sliced back off.  interpret=None auto-selects: compiled on TPU,
+    interpreted elsewhere."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
+    from ..core.layout import pad_nt
     nl, _, _, C = dg.shape
     k = b.shape[2]
-    assert C % block_cols == 0
-    grid = (C // block_cols,)
+    pad = (-C) % block_cols
+    if pad:
+        lo = pad_nt(lo, block_cols)
+        up = pad_nt(up, block_cols)
+        b = pad_nt(b, block_cols)
+        # pad columns get the identity system  I x = 0  so the unpivoted
+        # elimination never divides by zero
+        dg = pad_nt(dg, block_cols).at[:, :, :, C:].add(
+            jnp.eye(6, dtype=dg.dtype)[None, :, :, None])
+    Cp = C + pad
+    grid = (Cp // block_cols,)
     bspec = pl.BlockSpec((nl, 6, 6, block_cols), lambda i: (0, 0, 0, i))
     rspec = pl.BlockSpec((nl, 6, k, block_cols), lambda i: (0, 0, 0, i))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _block_thomas_kernel,
         grid=grid,
         in_specs=[bspec, bspec, bspec, rspec],
@@ -106,3 +126,4 @@ def block_thomas_cell(lo: jax.Array, dg: jax.Array, up: jax.Array,
         scratch_shapes=[pltpu.VMEM((nl, 6, 6, block_cols), dg.dtype)],
         interpret=interpret,
     )(lo, dg, up, b)
+    return out[..., :C] if pad else out

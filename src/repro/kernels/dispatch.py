@@ -1,0 +1,73 @@
+"""Solver-backend dispatch for the ocean hot path.
+
+The paper's speed lives in the layout/solver plumbing (§2.1, §2.3-2.4), so
+which implementation of the column solves runs must be an explicit, testable
+choice rather than an accident of import order:
+
+  * ``Backend.REF``              — pure-jnp references (``kernels/ref.py`` /
+                                   ``core/vertical.py``); XLA fuses these well
+                                   and they are the equivalence oracles.
+  * ``Backend.PALLAS_INTERPRET`` — the Pallas kernels run through the Pallas
+                                   interpreter.  Numerically identical to the
+                                   compiled kernels; this is what CPU CI runs
+                                   so the kernel code path is exercised on
+                                   every test invocation.
+  * ``Backend.PALLAS``           — compiled Pallas kernels (TPU/GPU).
+
+``resolve(None)`` / ``resolve("auto")`` picks PALLAS on TPU,
+PALLAS_INTERPRET on CPU (same kernel code everywhere it can run), and REF on
+other accelerators (the kernels use TPU memory spaces and do not lower
+through the Pallas GPU backend).  ``OceanConfig.backend`` feeds straight
+into this.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional, Union
+
+import jax
+
+class Backend(str, enum.Enum):
+    REF = "ref"
+    PALLAS_INTERPRET = "pallas_interpret"
+    PALLAS = "pallas"
+
+
+BackendLike = Optional[Union[str, Backend]]
+
+
+def auto_backend() -> Backend:
+    """TPU runs the kernels compiled; CPU runs them interpreted (so CI
+    exercises the kernel code path); other accelerators fall back to ref —
+    the kernels use TPU memory spaces (pltpu.VMEM scratch) and do not lower
+    through the Pallas GPU backend."""
+    plat = jax.default_backend()
+    if plat == "tpu":
+        return Backend.PALLAS
+    if plat == "cpu":
+        return Backend.PALLAS_INTERPRET
+    return Backend.REF
+
+
+def resolve(backend: BackendLike = None) -> Backend:
+    """Normalise a user-facing backend spec to a Backend member.
+
+    Accepts None/"auto" (platform auto-detect), Backend members, their string
+    values, and the legacy ops.py name "kernel" (= auto minus ref)."""
+    if backend is None or backend == "auto" or backend == "kernel":
+        return auto_backend()
+    if isinstance(backend, Backend):
+        return backend
+    return Backend(backend)
+
+
+def interpret_default() -> bool:
+    """Default `interpret` flag for raw kernel entry points: compiled on
+    TPU, interpreted elsewhere.  (The seed hard-coded interpret=True,
+    silently interpreting even on TPU.)"""
+    return jax.default_backend() != "tpu"
+
+
+def interpret_flag(backend: Backend) -> bool:
+    """The `interpret` flag a resolved non-ref backend implies."""
+    return backend is not Backend.PALLAS

@@ -19,10 +19,13 @@ anyway — no per-layer reload.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import dispatch
 
 
 def _minv_face(face, inv_area):
@@ -71,30 +74,47 @@ def _w_kernel(F_ref, area_ref, wf_ref, out_ref):
 
 
 def _call(kernel, F, area, bc_vals, block_cols, interpret):
+    if interpret is None:
+        interpret = dispatch.interpret_default()
+    from ..core.layout import pad_nt
     rows, C = F.shape
-    assert C % block_cols == 0
-    grid = (C // block_cols,)
-    return pl.pallas_call(
+    pad = (-C) % block_cols
+    if pad:
+        F = pad_nt(F, block_cols)
+        bc_vals = pad_nt(bc_vals, block_cols)
+        # pad lanes get area 1 (not 0) so 12/area stays finite
+        area = jnp.pad(area, ((0, 0), (0, pad)), constant_values=1.0)
+    Cp = C + pad
+    grid = (Cp // block_cols,)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
                   pl.BlockSpec((1, block_cols), lambda i: (0, i)),
                   pl.BlockSpec((3, block_cols), lambda i: (0, i))],
         out_specs=pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((rows, C), F.dtype),
+        out_shape=jax.ShapeDtypeStruct((rows, Cp), F.dtype),
         interpret=interpret,
     )(F, area, bc_vals)
+    return out[:, :C] if pad else out
 
 
 @functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
 def solve_r_cell(F: jax.Array, area: jax.Array, r_surf: jax.Array,
-                 block_cols: int = 128, interpret: bool = True) -> jax.Array:
-    """F: (nl*6, C) cell-layout RHS; area: (1, C); r_surf: (3, C)."""
+                 block_cols: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """F: (nl*6, C) cell-layout RHS; area: (1, C); r_surf: (3, C).
+
+    C is padded to a multiple of block_cols (unit area, zero RHS) and sliced
+    back; interpret=None auto-selects per platform."""
     return _call(_r_kernel, F, area, r_surf, block_cols, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
 def solve_w_cell(F: jax.Array, area: jax.Array, w_floor: jax.Array,
-                 block_cols: int = 128, interpret: bool = True) -> jax.Array:
-    """F: (nl*6, C) cell-layout RHS; area: (1, C); w_floor: (3, C)."""
+                 block_cols: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """F: (nl*6, C) cell-layout RHS; area: (1, C); w_floor: (3, C).
+
+    Same padding/auto-interpret contract as solve_r_cell."""
     return _call(_w_kernel, F, area, w_floor, block_cols, interpret)

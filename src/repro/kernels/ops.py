@@ -1,86 +1,188 @@
-"""Public jit'd wrappers for the Pallas kernels with platform dispatch.
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
 
-On TPU the Pallas kernels compile natively (interpret=False); on CPU they
-run in interpret mode for validation, or fall back to the pure-jnp refs
-(`backend='ref'`) which XLA fuses well — the CPU benchmarks and the dry-run
-lowering use the ref path, the kernel tests use interpret mode.
+Every ocean-path solver routes through `dispatch.Backend`:
+
+  * ref              — pure-jnp references (XLA-fused; equivalence oracles)
+  * pallas_interpret — Pallas kernels in interpreter mode (CPU CI)
+  * pallas           — compiled Pallas kernels (TPU/GPU)
+
+`backend=None`/"auto" resolves per platform (accelerator -> pallas, CPU ->
+pallas_interpret), so the kernel code path is exercised everywhere and never
+silently interpreted on an accelerator.  The SoA-level entry points
+(`solve_r`, `solve_w`, `block_thomas`) take the stepper's native
+(..., nl, 6, nt) shapes, fold any leading component axis into extra cell
+columns (columns are independent, so components just widen the lane axis),
+run the cell-layout kernel, and unfold — one layout transform in, one out.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
+import jax.numpy as jnp
 
-from . import cell_transpose, column_solve, flash_attention, matrix_free
+from . import cell_transpose, column_solve, dispatch, flash_attention
+from . import matrix_free
 from . import ref as _ref
 from . import tridiag as _tridiag
 from . import wkv6 as _wkv6
+from .dispatch import Backend
+
+CELL = cell_transpose.CELL
 
 
 def default_backend() -> str:
-    plat = jax.default_backend()
-    return "kernel" if plat == "tpu" else "ref"
+    """Platform-auto backend name (resolve() also maps the seed-era
+    "kernel" alias onto this)."""
+    return dispatch.auto_backend().value
 
 
-def _interp() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def tridiag(dl, d, du, b, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+# ---------------------------------------------------------------------------
+# ocean column solvers — cell-layout signatures
+# ---------------------------------------------------------------------------
+def tridiag(dl, d, du, b, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.tridiag(dl, d, du, b)
-    return _tridiag.tridiag_cell(dl, d, du, b, interpret=_interp())
+    return _tridiag.tridiag_cell(dl, d, du, b,
+                                 interpret=dispatch.interpret_flag(bk))
 
 
-def solve_r_cell(F, area, r_surf, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+def solve_r_cell(F, area, r_surf, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.solve_r_cell(F, area, r_surf)
-    return matrix_free.solve_r_cell(F, area, r_surf, interpret=_interp())
+    return matrix_free.solve_r_cell(F, area, r_surf,
+                                    interpret=dispatch.interpret_flag(bk))
 
 
-def solve_w_cell(F, area, w_floor, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+def solve_w_cell(F, area, w_floor, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.solve_w_cell(F, area, w_floor)
-    return matrix_free.solve_w_cell(F, area, w_floor, interpret=_interp())
+    return matrix_free.solve_w_cell(F, area, w_floor,
+                                    interpret=dispatch.interpret_flag(bk))
 
 
-def block_thomas_cell(lo, dg, up, b, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+def block_thomas_cell(lo, dg, up, b, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.block_thomas_cell(lo, dg, up, b)
-    return column_solve.block_thomas_cell(lo, dg, up, b, interpret=_interp())
+    return column_solve.block_thomas_cell(
+        lo, dg, up, b, interpret=dispatch.interpret_flag(bk))
 
 
-def soa_to_cell(x, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+def soa_to_cell(x, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.soa_to_cell(x)
-    return cell_transpose.soa_to_cell(x, interpret=_interp())
+    return cell_transpose.soa_to_cell(x, interpret=dispatch.interpret_flag(bk))
 
 
-def cell_to_soa(x, nt, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+def cell_to_soa(x, nt, backend: dispatch.BackendLike = None):
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
         return _ref.cell_to_soa(x, nt)
-    return cell_transpose.cell_to_soa(x, interpret=_interp())[..., :nt]
+    return cell_transpose.cell_to_soa(x, nt=nt,
+                                      interpret=dispatch.interpret_flag(bk))
+
+
+# ---------------------------------------------------------------------------
+# ocean column solvers — SoA signatures (the stepper hot path)
+# ---------------------------------------------------------------------------
+def _fold_cols(x, K, nt):
+    """(K, a, b, nt) -> (a*b, K*nt): components become extra cell columns."""
+    Kk, a, b_, _ = x.shape
+    return jnp.moveaxis(x, 0, 2).reshape(a * b_, K * nt)
+
+
+def _unfold_cols(x, K, nl, nn, nt):
+    """(nl*nn, K*nt) -> (K, nl, nn, nt)."""
+    return jnp.moveaxis(x.reshape(nl, nn, K, nt), 2, 0)
+
+
+def _solve_cells(kernel, geom, F, bc, interpret):
+    """Shared SoA->cell plumbing for the matrix-free sweeps: fold any
+    leading component axis of F (..., nl, 6, nt) into extra cell columns,
+    run `kernel` with the per-column boundary values bc (..., 3, nt), and
+    unfold."""
+    *lead, nl, six, nt = F.shape
+    K = 1
+    for d in lead:
+        K *= d
+    Ff = F.reshape(K, nl, six, nt)
+    bc = jnp.broadcast_to(bc, (*lead, 3, nt)).reshape(K, 3, nt)
+    Fc = _fold_cols(Ff, K, nt)
+    bc_c = jnp.moveaxis(bc, 0, 1).reshape(3, K * nt)
+    area_c = jnp.tile(geom.area[None, :], (1, K))
+    out = kernel(Fc, area_c, bc_c, interpret=interpret)
+    return _unfold_cols(out, K, nl, six, nt).reshape(*lead, nl, six, nt)
+
+
+def solve_r(geom, F, r_surf, backend: dispatch.BackendLike = None):
+    """Matrix-free D_vu solve in SoA shapes with backend dispatch.
+
+    F: (..., nl, 6, nt); r_surf: (..., 3, nt) -> (..., nl, 6, nt)."""
+    from ..core import vertical
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
+        return vertical.solve_r(geom, F, r_surf)
+    return _solve_cells(matrix_free.solve_r_cell, geom, F, r_surf,
+                        dispatch.interpret_flag(bk))
+
+
+def solve_w(geom, F, w_floor=None, backend: dispatch.BackendLike = None):
+    """Matrix-free D_vd solve in SoA shapes with backend dispatch.
+
+    F: (..., nl, 6, nt); w_floor: (..., 3, nt) or None (impermeable floor)."""
+    from ..core import vertical
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
+        return vertical.solve_w(geom, F, w_floor)
+    if w_floor is None:
+        w_floor = jnp.zeros((3, F.shape[-1]), F.dtype)
+    return _solve_cells(matrix_free.solve_w_cell, geom, F, w_floor,
+                        dispatch.interpret_flag(bk))
+
+
+def block_thomas(blocks, rhs, backend: dispatch.BackendLike = None):
+    """Block-tridiagonal column solve with backend dispatch.
+
+    blocks: vertical.Blocks with (nl, 6, 6, nt) entries; rhs: (k, nl, 6, nt).
+    The non-ref path keeps the whole solve in cell layout: the lane axis IS
+    the cell column axis (the kernel grid walks 128-wide cells), so the only
+    layout work is one moveaxis of the k RHS components in and out."""
+    from ..core import vertical
+    bk = dispatch.resolve(backend)
+    if bk is Backend.REF:
+        return vertical.block_thomas_solve(blocks, rhs)
+    b = jnp.moveaxis(rhs, 0, 2)                      # (nl, 6, k, nt)
+    x = column_solve.block_thomas_cell(
+        blocks.lo, blocks.dg, blocks.up, b,
+        interpret=dispatch.interpret_flag(bk))
+    return jnp.moveaxis(x, 2, 0)
+
+
+# ---------------------------------------------------------------------------
+# model kernels (non-ocean paths keep the historic ref-on-CPU default)
+# ---------------------------------------------------------------------------
+def _model_default() -> str:
+    """Model kernels keep the historic default: compiled on TPU, ref
+    elsewhere (XLA fuses the jnp fallbacks well on CPU)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def wkv6(r, k, v, w, u, backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+    bk = dispatch.resolve(backend or _model_default())
+    if bk is Backend.REF:
         return _ref.wkv6(r, k, v, w, u)
-    return _wkv6.wkv6(r, k, v, w, u, interpret=_interp())
+    return _wkv6.wkv6(r, k, v, w, u, interpret=dispatch.interpret_flag(bk))
 
 
 def attention(q, k, v, causal=True, window=None, softcap=None,
               backend: str | None = None):
-    backend = backend or default_backend()
-    if backend == "ref":
+    bk = dispatch.resolve(backend or _model_default())
+    if bk is Backend.REF:
         return _ref.chunked_attention(q, k, v, causal=causal, window=window,
                                       softcap=softcap)
     return flash_attention.flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        interpret=_interp())
+        interpret=dispatch.interpret_flag(bk))
