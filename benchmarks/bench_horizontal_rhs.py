@@ -1,0 +1,276 @@
+"""Horizontal-RHS pipeline: seed ref path vs fused caches vs Pallas kernel.
+
+Assembles the per-stage horizontal bundle (pressure-gradient RHS, two
+lateral flux speeds, momentum-prediction / momentum / tracer advdiff,
+continuity RHS) three ways over nl in {4, 8, 16}:
+
+  ref    — the seed call pattern: every call re-runs its own lateral int/ext
+           gathers, zinterp and vol-quad interpolations (cache=None paths).
+  fused  — one EdgeCache + two TransportCaches per stage, momentum+tracers
+           batched into a single k=4 advdiff call (core/horizontal.py).
+  pallas — fused caches + the lateral advective term through the
+           kernels/horizontal_flux.py cell-layout kernel (interpreted on
+           CPU, compiled on TPU).
+
+Rows: name,us_per_call,derived.  Also writes BENCH_horizontal.json (list of
+row dicts incl. speedup and max|fused-ref|) so the perf trajectory of the
+model's hottest loop is machine-readable from this PR onward.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dg3d, geometry, horizontal, mesh2d
+from repro.core.extrusion import VGrid, layer_geometry
+from repro.kernels import dispatch
+
+from .common import row, time_fn
+
+LAYERS = [4, 8, 16]
+
+
+def _setup(nl, nx=24, ny=18):
+    """Channel mesh (interior + WALL + OPEN edges) with smooth active flow."""
+    m = mesh2d.channel_mesh(nx, ny, 8000.0, 6000.0, jitter=0.15, seed=7)
+    geom = geometry.geom2d_from_mesh(m)
+    dt = geom.area.dtype
+    nt = m.nt
+    b = jnp.full((3, nt), 20.0, dt)
+    vg = VGrid(b=b, nl=nl)
+    eta = (0.05 * jnp.cos(jnp.pi * geom.node_x / 8000.0)
+           * jnp.cos(jnp.pi * geom.node_y / 6000.0)).astype(dt)
+    vge = layer_geometry(vg, eta)
+    rng = np.random.default_rng(0)
+    r3 = lambda s=0.05: jnp.asarray(
+        rng.normal(scale=s, size=(nl, 6, nt)).astype(dt))
+    ux = 0.1 + r3()
+    uy = r3()
+    T = 10.0 + r3(0.5)
+    S = 35.0 + r3(0.5)
+    rho = -0.15 * (T - 10.0)
+    return geom, vg, vge, eta, ux, uy, T, S, rho
+
+
+# ---------------------------------------------------------------------------
+# The SEED implementation, copied verbatim (PR-1 state): per-edge .at[].add
+# edge scatter and the monolithic advdiff that re-runs every interpolation.
+# This is the wall-clock baseline the fused pipeline is measured against —
+# the refactored no-cache path in dg3d shares code (and micro-optimisations)
+# with the fused path, so it is the *numerical* oracle but not the perf seed.
+# ---------------------------------------------------------------------------
+def _seed_edge_scatter(geom, g):
+    import numpy as np
+    from repro.core.geometry import EDGE_A, EDGE_B, W_GAUSS, _PHIA, _PHIB
+    w = geom.edge_len[:, None, :] * jnp.asarray(W_GAUSS)[:, None]
+    ga = (g * w * _PHIA[:, None]).sum(axis=-2)
+    gb = (g * w * _PHIB[:, None]).sum(axis=-2)
+    out = jnp.zeros_like(ga)
+    for e in range(3):
+        out = out.at[..., EDGE_A[e], :].add(ga[..., e, :])
+        out = out.at[..., EDGE_B[e], :].add(gb[..., e, :])
+    return out
+
+
+def _seed_lat_scatter(geom, g):
+    from repro.core.vertical import PHI_Z
+    s = _seed_edge_scatter(geom, g)
+    top = jnp.einsum("z,...znt->...nt", PHI_Z[:, 0], s)
+    bot = jnp.einsum("z,...znt->...nt", PHI_Z[:, 1], s)
+    return jnp.concatenate([top, bot], axis=-2)
+
+
+def _seed_advdiff(geom, vge, nl, f, qx, qy, flux, nu_h, bc_reflect=False):
+    from repro.core import geometry as G
+    from repro.core.dg3d import (_gather_ext_grad, iso_grad, lat_interp,
+                                 lat_interp_ext, reflect_pair,
+                                 sigma3_lateral, zinterp)
+    from repro.core.vertical import PHI_Z
+    k = f.shape[0]
+    jz_q = G.vol_interp(vge.jz)
+    fq = zinterp(f)
+    fqq = G.vol_interp(fq)
+    qxq = G.vol_interp(zinterp(qx))
+    qyq = G.vol_interp(zinterp(qy))
+    gx = (fqq * qxq).sum(axis=-2)
+    gy = (fqq * qyq).sum(axis=-2)
+    sx = gx[..., None, :] * geom.dphi[:, 0, :]
+    sy = gy[..., None, :] * geom.dphi[:, 1, :]
+    s = (sx + sy) * (geom.area / 3.0)
+    top = jnp.einsum("z,...znt->...nt", PHI_Z[:, 0], s)
+    bot = jnp.einsum("z,...znt->...nt", PHI_Z[:, 1], s)
+    out = jnp.concatenate([top, bot], axis=-2)
+    fi = lat_interp(f)
+    fe = lat_interp_ext(geom, f)
+    if bc_reflect:
+        fxe, fye = reflect_pair(geom, fe[0], fe[1])
+        fe = jnp.stack([fxe, fye])
+    f_up = jnp.where(flux.upwind > 0.5, fi, fe)
+    out = out - _seed_lat_scatter(geom, f_up * flux.speed[None])
+    nu_q = G.vol_interp(zinterp(nu_h))
+    gradf = iso_grad(geom, fq)
+    coef = (nu_q * jz_q).sum(axis=-2) / 3.0 * geom.area
+    dvol = jnp.einsum("...zdt,ndt,...zt->...znt", gradf, geom.dphi, coef)
+    dtop = jnp.einsum("z,...znt->...nt", PHI_Z[:, 0], dvol)
+    dbot = jnp.einsum("z,...znt->...nt", PHI_Z[:, 1], dvol)
+    out = out - jnp.concatenate([dtop, dbot], axis=-2)
+    gno = jnp.einsum("...zdt,edt->...zet", gradf,
+                     jnp.stack([geom.edge_nx, geom.edge_ny], axis=1))
+    nzjz_int = G.edge_interp(vge.jz)
+    nu_int = lat_interp(nu_h)
+    flux_int = gno[..., None, :] * nu_int[None] * nzjz_int[None, None, None]
+    gradf_e = _gather_ext_grad(geom, gradf)
+    nzjz_ext = G.edge_interp_ext(geom, vge.jz)
+    nu_ext = lat_interp_ext(geom, nu_h)
+    flux_ext = gradf_e[..., None, :] * nu_ext[None] * nzjz_ext[None, None, None]
+    interior = geom.interior[None, :, None, :]
+    mean_flux = 0.5 * (flux_int + flux_ext) * interior
+    out = out + _seed_lat_scatter(geom, mean_flux)
+    sig = sigma3_lateral(geom)
+    numean = 0.5 * (nu_int + nu_ext)
+    jzmean = 0.5 * (nzjz_int + nzjz_ext)
+    jumpf = 0.5 * (fi - fe)
+    pen = sig[:, None, :] * numean * jzmean[None, None] * jumpf * interior
+    out = out - _seed_lat_scatter(geom, pen)
+    return out
+
+
+def _seed_continuity(geom, vge, nl, qx, qy, flux):
+    from repro.core import geometry as G
+    from repro.core.dg3d import zinterp
+    from repro.core.vertical import PHI_Z
+    qxq = G.vol_interp(zinterp(qx))
+    qyq = G.vol_interp(zinterp(qy))
+    sx = jnp.einsum("...zqt,nt->...znt", qxq, geom.dphi[:, 0, :])
+    sy = jnp.einsum("...zqt,nt->...znt", qyq, geom.dphi[:, 1, :])
+    s = (sx + sy) * (geom.area / 3.0)
+    top = jnp.einsum("z,...znt->...nt", PHI_Z[:, 0], s)
+    bot = jnp.einsum("z,...znt->...nt", PHI_Z[:, 1], s)
+    F = jnp.concatenate([top, bot], axis=-2)
+    return F - _seed_lat_scatter(geom, flux.speed)
+
+
+def rhs_ref(geom, vg, vge, nl, ux, uy, T, S, eta, rho):
+    """The seed per-call pattern: 2 flux speeds + 3 monolithic advdiff
+    calls, every one re-interpolating jz / transport / neighbour states.
+    As in the real stage, the prediction transport (q) and the corrected
+    transport (q-bar) differ, so the two flux/advection chains are
+    genuinely distinct work."""
+    q = dg3d.transport_from_velocity(vge, ux, uy)
+    qbx, qby = _corrected_transport(q, nl)
+    nu_h = dg3d.smagorinsky_nu(geom, ux, uy)
+    kap_h = dg3d.okubo_kappa(geom, nl)
+    u_pair = jnp.stack([ux, uy])
+    tr_pair = jnp.stack([T, S])
+    flux1 = dg3d.lateral_flux_speed(geom, vge, vg, q[0], q[1], eta, vg.b)
+    f_pred = _seed_advdiff(geom, vge, nl, u_pair, q[0], q[1],
+                           flux1, nu_h, bc_reflect=True)
+    flux2 = dg3d.lateral_flux_speed(geom, vge, vg, qbx, qby, eta, vg.b)
+    f_mom = _seed_advdiff(geom, vge, nl, u_pair, qbx, qby,
+                          flux2, nu_h, bc_reflect=True)
+    f_tr = _seed_advdiff(geom, vge, nl, tr_pair, qbx, qby,
+                         flux2, kap_h, bc_reflect=False)
+    F_cont = _seed_continuity(geom, vge, nl, qbx, qby, flux2)
+    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vge, rho)
+    return f_pred, f_mom, f_tr, F_cont, F_r, r_s
+
+
+def _corrected_transport(q, nl):
+    """A q-bar-like column-wise corrected transport (mirrors the stage's
+    consistent_transport defect distribution without running the 2D burst)."""
+    from repro.core.extrusion import vsum_dofs
+    d = vsum_dofs(q[0]) / (2.0 * nl)
+    d6 = jnp.concatenate([d, d], axis=-2)
+    return q[0] + 0.01 * d6[None], q[1] - 0.01 * d6[None]
+
+
+def rhs_fused(geom, vg, vge, nl, ux, uy, T, S, eta, rho, backend="ref"):
+    """The fused pipeline: one EdgeCache, shared TransportCaches, batched
+    momentum+tracer advdiff, optional Pallas lateral-flux kernel."""
+    hc = horizontal.stage_cache(geom, vge)
+    q = dg3d.transport_from_velocity(vge, ux, uy)
+    qbx, qby = _corrected_transport(q, nl)
+    nu_h = dg3d.smagorinsky_nu(geom, ux, uy)
+    kap_h = dg3d.okubo_kappa(geom, nl)
+    u_pair = jnp.stack([ux, uy])
+    tr_pair = jnp.stack([T, S])
+    fs_u = dg3d.field_states(geom, u_pair, bc_reflect=True)
+    diff_u = dg3d.horizontal_diffusion(geom, vge, nl, u_pair, nu_h,
+                                       cache=hc, fcache=fs_u)
+    tc1 = horizontal.transport_cache(geom, vge, vg, hc, q[0], q[1])
+    f_pred = dg3d.horizontal_advection(geom, vge, nl, u_pair, q[0], q[1],
+                                       tc1.flux, tcache=tc1, fcache=fs_u,
+                                       backend=backend) + diff_u
+    tc2 = horizontal.transport_cache(geom, vge, vg, hc, qbx, qby)
+    f_mom, f_tr = horizontal.advdiff_momentum_tracers(
+        geom, vge, nl, u_pair, tr_pair, qbx, qby, tc2.flux, nu_h, kap_h,
+        fs_u=fs_u, diff_u=diff_u, cache=hc, tcache=tc2, backend=backend)
+    F_cont = dg3d.continuity_rhs(geom, vge, nl, qbx, qby, tc2.flux,
+                                 tcache=tc2)
+    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vge, rho, cache=hc)
+    return f_pred, f_mom, f_tr, F_cont, F_r, r_s
+
+
+def _maxdiff(a, b):
+    """Max relative difference over the bundle (scaled per output)."""
+    return max(float(jnp.abs(x - y).max())
+               / max(float(jnp.abs(x).max()), 1e-30) for x, y in zip(a, b))
+
+
+def run(layers=LAYERS, json_path="BENCH_horizontal.json", dry_run=False,
+        warmup=3, iters=9):
+    interp = dispatch.interpret_default()
+    kmode = "interpret" if interp else "compiled"
+    kbackend = "pallas_interpret" if interp else "pallas"
+    if dry_run:
+        # compile/shape smoke only: tiny mesh, one iteration, no JSON (do
+        # not clobber a real perf record with smoke numbers)
+        layers, warmup, iters, json_path = [layers[0]], 1, 1, None
+    records = []
+    for nl in layers:
+        geom, vg, vge, eta, ux, uy, T, S, rho = _setup(
+            nl, nx=8 if dry_run else 24, ny=6 if dry_run else 18)
+        nt = geom.nt
+        args = (ux, uy, T, S, eta, rho)
+        f_ref = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                        rhs_ref(g, v, e, n, *a))
+        f_fus = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                        rhs_fused(g, v, e, n, *a, backend="ref"))
+        f_pal = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                        rhs_fused(g, v, e, n, *a, backend=kbackend))
+        out_ref = f_ref(*args)
+        diff_fus = _maxdiff(out_ref, f_fus(*args))
+        diff_pal = _maxdiff(out_ref, f_pal(*args))
+        t_ref = time_fn(f_ref, *args, warmup=warmup, iters=iters, reduce="min")
+        t_fus = time_fn(f_fus, *args, warmup=warmup, iters=iters, reduce="min")
+        t_pal = time_fn(f_pal, *args, warmup=warmup, iters=iters, reduce="min")
+        for name, t, diff, extra in (
+                ("ref", t_ref, 0.0, ""),
+                ("fused", t_fus, diff_fus,
+                 f"speedup_vs_ref={t_ref / t_fus:.2f}x"),
+                (f"pallas_{kmode}", t_pal, diff_pal,
+                 f"speedup_vs_ref={t_ref / t_pal:.2f}x")):
+            derived = f"maxdiff={diff:.2e}" + (f";{extra}" if extra else "")
+            row(f"horizontal_rhs_nl{nl}_nt{nt}_{name}", t * 1e6, derived)
+            records.append(dict(name=name, nl=nl, nt=nt,
+                                us_per_call=t * 1e6,
+                                speedup_vs_ref=t_ref / t,
+                                maxdiff_vs_ref=diff))
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(records, fh, indent=2)
+    return records
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny mesh, 1 iter: compile/shape smoke for CI")
+    ap.add_argument("--json", default="BENCH_horizontal.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json, dry_run=args.dry_run)

@@ -8,8 +8,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def time_fn(fn, *args, warmup=2, iters=5, **kw):
-    """Median wall time of fn(*args) with block_until_ready, in seconds."""
+def time_fn(fn, *args, warmup=2, iters=5, reduce="median", **kw):
+    """Wall time of fn(*args) with block_until_ready, in seconds.
+
+    reduce: "median" (default) or "min" — min is the robust choice on noisy
+    shared machines (any sample is an upper bound on the true cost)."""
+    if reduce not in ("median", "min"):
+        raise ValueError(f"reduce must be 'median' or 'min', got {reduce!r}")
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
@@ -19,7 +24,7 @@ def time_fn(fn, *args, warmup=2, iters=5, **kw):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(min(ts) if reduce == "min" else np.median(ts))
 
 
 def row(name: str, us_per_call: float, derived: str = ""):

@@ -5,6 +5,10 @@ on CPU + TPU roofline models; see each module's docstring for the mapping).
 
   bench_column_solve — paper Fig. 15 axis: ref vs Pallas cell-layout column
                      solvers (block-Thomas + matrix-free r/w) over nl/columns
+  bench_horizontal_rhs — the fused horizontal-RHS pipeline vs the seed
+                     per-call path vs the Pallas lateral-flux kernel over
+                     nl in {4,8,16}; also writes BENCH_horizontal.json
+                     (machine-readable perf trajectory of the hottest loop)
   fig13_resolution — paper Fig. 13 (perf vs horizontal resolution)
   fig15_layers     — paper Fig. 15 (layer-count scaling / occupancy)
   fig16_scaling    — paper Figs. 16-18 (multi-device scaling, Amdahl)
@@ -27,11 +31,12 @@ def main() -> None:
                     help="skip the multi-process scaling benchmark")
     args = ap.parse_args()
 
-    from . import (bench_column_solve, fig13_resolution, fig15_layers,
-                   fig16_scaling, kernel_util, roofline_table)
+    from . import (bench_column_solve, bench_horizontal_rhs, fig13_resolution,
+                   fig15_layers, fig16_scaling, kernel_util, roofline_table)
     benches = {
         "kernel_util": kernel_util.run,
         "bench_column_solve": bench_column_solve.run,
+        "bench_horizontal_rhs": bench_horizontal_rhs.run,
         "fig13_resolution": fig13_resolution.run,
         "fig15_layers": fig15_layers.run,
         "fig16_scaling": fig16_scaling.run,

@@ -13,5 +13,10 @@ BUDGET="${CI_TIME_BUDGET_S:-2400}"
 # collection gate: any import error fails fast and loudly
 timeout 300 python -m pytest -q --collect-only >/dev/null
 
+# kernel-layer smoke: compile + run the horizontal-RHS benchmark on a tiny
+# mesh (ref + fused + Pallas-interpret lateral-flux kernel) so import/shape
+# regressions in the kernel layer fail fast
+timeout 600 python -m benchmarks.bench_horizontal_rhs --dry-run >/dev/null
+
 # the tier-1 command from ROADMAP.md, under the time budget
 exec timeout "$BUDGET" python -m pytest -x -q "$@"

@@ -1,0 +1,167 @@
+"""Fused horizontal-RHS pipeline: per-stage interpolation caches (ISSUE 4).
+
+Each IMEX stage evaluates the horizontal DG terms several times — momentum
+flux prediction, momentum update, tracers, two lateral flux speeds, the
+continuity RHS and the pressure gradient — and in the seed every call
+independently re-ran the lateral int/ext neighbour gathers, `zinterp`, and
+the volume-quad interpolation on fields that are identical across calls
+(`jz`, `{Jz/H}`, eta/H edge states, the transport `qxq/qyq`).  XLA does not
+deduplicate those gathers across separately-assembled calls, so the hot
+path was dominated by repeated gather + interpolation traffic (paper §2;
+Klöckner et al.; Modave et al.: the surface kernels are bandwidth-bound on
+redundant gathers).
+
+Two cache levels, both plain pytrees so they flow through jit:
+
+  * ``EdgeCache``      — built ONCE per stage from the evaluation-mesh
+                         vertical geometry: every field-independent edge /
+                         volume interpolation (jz gathers, {Jz/H}, eta/H
+                         edge states, sigma3 penalty, edge quad weights).
+  * ``TransportCache`` — built once per transport (q for the prediction,
+                         q-bar for the corrected update): vol-quad transport
+                         `qxq/qyq` shared by `horizontal_advdiff` and
+                         `continuity_rhs`, plus the LateralFlux speeds.
+
+`dg3d.horizontal_advdiff`, `lateral_flux_speed`, `continuity_rhs` and
+`pressure_gradient_rhs` consume these via their ``cache``/``tcache``
+arguments; `advdiff_momentum_tracers` additionally batches momentum and
+tracers into a single k-stacked advdiff call (their flux speeds coincide).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import dg3d
+from . import geometry as G
+from .extrusion import VertGeom
+from ..kernels import dispatch as _dispatch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeCache:
+    """Field-independent per-stage interpolations (one build per stage)."""
+    jz_q: jax.Array      # (3qh, nt)   vol-quad J_z
+    jz_int: jax.Array    # (3, 2, nt)  interior J_z at lateral qps
+    jz_ext: jax.Array    # (3, 2, nt)  exterior (gathered) J_z
+    jz_mean: jax.Array   # (3, 2, nt)  {J_z}
+    alpha: jax.Array     # (3, 2, nt)  {Jz/H} lateral coefficient
+    H_int: jax.Array     # (3, 2, nt)  column height edge states
+    H_ext: jax.Array
+    eta_int: jax.Array   # (3, 2, nt)  free-surface edge states
+    eta_ext: jax.Array
+    sigma3: jax.Array    # (3, nt)     interior-penalty coefficient
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TransportCache:
+    """Per-transport interpolations (one build per transport per stage)."""
+    qxq: jax.Array       # (nl, 2qz, 3qh, nt) vol-quad transport
+    qyq: jax.Array
+    flux: dg3d.LateralFlux
+
+
+def stage_cache(geom: G.Geom2D, vge: VertGeom,
+                h_min: float = 0.05) -> EdgeCache:
+    """Build the per-stage EdgeCache from the evaluation-mesh geometry.
+
+    This is the ONLY place the stage gathers exterior states of jz, Jz/H,
+    H, and eta — the structural one-per-stage guarantee asserted by
+    tests/test_horizontal.py's call-count test.  (Edge quadrature weights
+    need no cache slot: geometry.edge_scatter bakes the scatter tensor in
+    as trace-time constants.)"""
+    jz_int = G.edge_interp(vge.jz)
+    jz_ext = G.edge_interp_ext(geom, vge.jz)
+    a = vge.jz / jnp.maximum(vge.H, h_min)
+    ai = G.edge_interp(a)
+    ae = G.edge_interp_ext(geom, a)
+    return EdgeCache(
+        jz_q=G.vol_interp(vge.jz),
+        jz_int=jz_int, jz_ext=jz_ext, jz_mean=0.5 * (jz_int + jz_ext),
+        alpha=0.5 * (ai + ae),
+        H_int=G.edge_interp(vge.H),
+        H_ext=G.edge_interp_ext(geom, vge.H),
+        eta_int=G.edge_interp(vge.eta),
+        eta_ext=G.edge_interp_ext(geom, vge.eta),
+        sigma3=dg3d.sigma3_lateral(geom))
+
+
+def transport_cache(geom: G.Geom2D, vge: VertGeom, vg, cache: EdgeCache,
+                    qx: jax.Array, qy: jax.Array,
+                    fbar_edge=None, qbar2d=None,
+                    h_min: float = 0.05) -> TransportCache:
+    """Flux speeds + vol-quad interp of one transport, sharing EdgeCache.
+
+    The free surface and bathymetry are taken from vge / vg — the cached
+    eta/H edge states in `cache` were built from the same vge, so there is
+    no way to pass an inconsistent surface."""
+    flux = dg3d.lateral_flux_speed(
+        geom, vge, vg, qx, qy, vge.eta, vg.b, fbar_edge=fbar_edge,
+        qbar2d=qbar2d, h_min=h_min, cache=cache)
+    return TransportCache(qxq=G.vol_interp(dg3d.zinterp(qx)),
+                          qyq=G.vol_interp(dg3d.zinterp(qy)), flux=flux)
+
+
+def concat_states(a: dg3d.FieldStates, b: dg3d.FieldStates) -> dg3d.FieldStates:
+    """Stack two FieldStates along the field axis (batched advdiff input)."""
+    cat = lambda x, y: jnp.concatenate([x, y], axis=0)
+    fx = cat(a.fx, b.fx) if (a.fx is not None and b.fx is not None) else None
+    return dg3d.FieldStates(
+        fq=cat(a.fq, b.fq), fqq=cat(a.fqq, b.fqq), fi=cat(a.fi, b.fi),
+        fe=cat(a.fe, b.fe), fx=fx, gradf=cat(a.gradf, b.gradf),
+        gno=cat(a.gno, b.gno), gradf_e=cat(a.gradf_e, b.gradf_e))
+
+
+def advdiff_momentum_tracers(geom: G.Geom2D, vge: VertGeom, nl: int,
+                             u_pair: jax.Array, tr_pair: jax.Array,
+                             qx: jax.Array, qy: jax.Array,
+                             flux: dg3d.LateralFlux,
+                             nu_m: jax.Array, nu_tr: jax.Array,
+                             fs_u=None, fs_tr=None, diff_u=None,
+                             open_tr=None, cache=None, tcache=None,
+                             backend="ref"):
+    """Momentum + tracer horizontal RHS sharing one LateralFlux (q-bar).
+
+    fs_u / fs_tr are the per-stage FieldStates (fs_u is shared with the
+    momentum *prediction* call, which interpolates the same velocity);
+    diff_u is the momentum diffusion term if the stage already built it —
+    it is flux-independent, so prediction and update share ONE evaluation.
+    open_tr is the optional (2, nl, 6, nt) open-boundary tracer forcing,
+    used only when fs_tr is not prebuilt.
+
+    On kernel backends the advection runs as ONE k=4-stacked call — the k
+    fields fold into extra cell columns (lanes) of the lateral-flux
+    kernel.  On the ref backend two advection calls are kept: the stacking
+    requires concatenating the FieldStates, which materialises arrays XLA
+    would otherwise fuse into their consumers (measured slower on CPU).
+
+    Returns (f3h_momentum (2, ...), f3h_tracers (2, ...))."""
+    nodal = cache is not None
+    if fs_u is None:
+        fs_u = dg3d.field_states(geom, u_pair, bc_reflect=True, nodal=nodal)
+    if fs_tr is None:
+        fs_tr = dg3d.field_states(geom, tr_pair, open_values=open_tr,
+                                  nodal=nodal)
+    if _dispatch.resolve(backend) is _dispatch.Backend.REF:
+        adv_m = dg3d.horizontal_advection(geom, vge, nl, u_pair, qx, qy,
+                                          flux, tcache=tcache, fcache=fs_u,
+                                          backend=backend)
+        adv_t = dg3d.horizontal_advection(geom, vge, nl, tr_pair, qx, qy,
+                                          flux, tcache=tcache, fcache=fs_tr,
+                                          backend=backend)
+    else:
+        f = jnp.concatenate([u_pair, tr_pair], axis=0)
+        adv = dg3d.horizontal_advection(
+            geom, vge, nl, f, qx, qy, flux, tcache=tcache,
+            fcache=concat_states(fs_u, fs_tr), backend=backend)
+        adv_m, adv_t = adv[:2], adv[2:]
+    if diff_u is None:
+        diff_u = dg3d.horizontal_diffusion(geom, vge, nl, u_pair, nu_m,
+                                           cache=cache, fcache=fs_u)
+    diff_t = dg3d.horizontal_diffusion(geom, vge, nl, tr_pair, nu_tr,
+                                       cache=cache, fcache=fs_tr)
+    return adv_m + diff_u, adv_t + diff_t

@@ -20,7 +20,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from . import dg2d, dg3d, eos, turbulence, vertical
+from . import dg2d, dg3d, eos, horizontal, turbulence, vertical
 from . import geometry as G
 from ..kernels import ops as kops
 from .dg2d import Forcing2D, State2D
@@ -47,10 +47,16 @@ class OceanConfig:
     kappa_v_bg: float = 1e-5
     use_gls: bool = True
     halo_exchange_period: int = 0  # 0: per 2D RK stage; j>0: every j substeps
-    backend: str = "auto"        # column-solver backend (kernels/dispatch.py):
+    backend: str = "auto"        # kernel backend (kernels/dispatch.py):
                                  # ref | pallas_interpret | pallas | auto
                                  # (auto: pallas on TPU, interpret on CPU,
-                                 #  ref on other accelerators)
+                                 #  ref on other accelerators); used by the
+                                 # column solvers and the fused lateral-flux
+                                 # kernel
+    fused_horizontal: bool = True  # per-stage shared interpolation caches +
+                                   # k-stacked momentum/tracer advdiff
+                                   # (core/horizontal.py); False keeps the
+                                   # seed per-call path (equivalence oracle)
 
 
 @jax.tree_util.register_dataclass
@@ -163,19 +169,46 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     vge0 = layer_geometry(vg, st0.ext.eta, cfg.h_min)   # M0 mesh
     vgee = layer_geometry(vg, eta_e, cfg.h_min)         # evaluation mesh
 
+    # --- per-stage shared interpolations (fused horizontal pipeline) --------
+    # One EdgeCache per stage: the jz / {Jz/H} / eta / H exterior gathers and
+    # edge interpolations are computed HERE exactly once and shared by the
+    # pressure gradient, both flux speeds, the continuity RHS and both
+    # advdiff calls below (core/horizontal.py).
+    hc = (horizontal.stage_cache(geom, vgee, cfg.h_min)
+          if cfg.fused_horizontal else None)
+
     # --- density, pressure gradient r (matrix-free solve) -------------------
     rho = eos.rho_prime(S_e, T_e, _pressure_dbar(vg, vgee), cfg.eos_kind)
-    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho)
+    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho, cache=hc)
     r = kops.solve_r(geom, F_r, r_s, backend=cfg.backend)  # (2, nl, 6, nt)
 
     # --- component 1: horizontal flux prediction (with q, not qbar) ---------
     q = dg3d.transport_from_velocity(vgee, ux_e, uy_e)
-    flux_pred = dg3d.lateral_flux_speed(
-        geom, vgee, vg, q[0], q[1], eta_e, vg.b, h_min=cfg.h_min)
+    if hc is not None:
+        tc_pred = horizontal.transport_cache(
+            geom, vgee, vg, hc, q[0], q[1], h_min=cfg.h_min)
+        flux_pred = tc_pred.flux
+    else:
+        tc_pred = None
+        flux_pred = dg3d.lateral_flux_speed(
+            geom, vgee, vg, q[0], q[1], eta_e, vg.b, h_min=cfg.h_min)
     nu_h = dg3d.smagorinsky_nu(geom, ux_e, uy_e, cfg.cs_smag)
     u_pair = jnp.stack([ux_e, uy_e])
-    f3h_pred = dg3d.horizontal_advdiff(
-        geom, vgee, nl, u_pair, q[0], q[1], flux_pred, nu_h, bc_reflect=True)
+    if hc is not None:
+        # FieldStates of the evaluation velocity + its diffusion term, built
+        # ONCE: the prediction and the momentum-update advdiff interpolate
+        # the same fields, and the diffusion is flux-independent
+        fs_u = dg3d.field_states(geom, u_pair, bc_reflect=True)
+        diff_u = dg3d.horizontal_diffusion(geom, vgee, nl, u_pair, nu_h,
+                                           cache=hc, fcache=fs_u)
+        f3h_pred = dg3d.horizontal_advection(
+            geom, vgee, nl, u_pair, q[0], q[1], flux_pred,
+            tcache=tc_pred, fcache=fs_u, backend=cfg.backend) + diff_u
+    else:
+        fs_u = diff_u = None
+        f3h_pred = dg3d.horizontal_advdiff(
+            geom, vgee, nl, u_pair, q[0], q[1], flux_pred, nu_h,
+            bc_reflect=True)
     f3h_pred = f3h_pred + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
 
     # F_3D->2D: vertical sum + wind + (predicted) bottom drag
@@ -211,16 +244,22 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     # --- consistent transport, vertical velocity, mesh velocity --------------
     qbar = dg3d.consistent_transport(vgee, ux_e, uy_e, ext.q_bar_x,
                                      ext.q_bar_y, nl)
-    if cfg.exact_consistency:
+    fb_kw = (dict(fbar_edge=ext.fbar_edge,
+                  qbar2d=(ext.q_bar_x, ext.q_bar_y))
+             if cfg.exact_consistency else {})
+    if hc is not None:
+        tc = horizontal.transport_cache(
+            geom, vgee, vg, hc, qbar[0], qbar[1],
+            h_min=cfg.h_min, **fb_kw)
+        flux_c = tc.flux
+    else:
+        tc = None
         flux_c = dg3d.lateral_flux_speed(
             geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b,
-            fbar_edge=ext.fbar_edge, qbar2d=(ext.q_bar_x, ext.q_bar_y),
-            h_min=cfg.h_min)
-    else:
-        flux_c = dg3d.lateral_flux_speed(
-            geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b, h_min=cfg.h_min)
+            h_min=cfg.h_min, **fb_kw)
     w_t = kops.solve_w(
-        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c),
+        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c,
+                                  tcache=tc),
         backend=cfg.backend)
 
     wm_i = mesh_velocity(vg, st0.ext.eta, eta1, dtau)    # (nl+1, 3, nt)
@@ -231,11 +270,32 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     wface = jnp.concatenate(
         [wface, jnp.zeros((1, 3, nt), wface.dtype)], axis=0)  # floor: 0
 
+    # --- components 4+5 horizontal RHS: momentum + tracers ------------------
+    kap_h = dg3d.okubo_kappa(geom, nl)
+    tr_pair = jnp.stack([T_e, S_e])
+    open_vals = None
+    if forcing.T_open is not None:
+        open_vals = jnp.stack([forcing.T_open, forcing.S_open])
+    if hc is not None:
+        # momentum + tracers share flux_c; velocity FieldStates and the
+        # momentum diffusion are reused from the prediction call
+        f3h, f3h_tr = horizontal.advdiff_momentum_tracers(
+            geom, vgee, nl, u_pair, tr_pair, qbar[0], qbar[1], flux_c,
+            nu_h, kap_h, fs_u=fs_u, diff_u=diff_u, open_tr=open_vals,
+            cache=hc, tcache=tc, backend=cfg.backend)
+    else:
+        f3h = dg3d.horizontal_advdiff(
+            geom, vgee, nl, u_pair, qbar[0], qbar[1], flux_c, nu_h,
+            bc_reflect=True)
+        f3h_tr = dg3d.horizontal_advdiff(
+            geom, vgee, nl, tr_pair, qbar[0], qbar[1], flux_c, kap_h,
+            bc_reflect=False, open_values=open_vals)
+
     # --- component 4: momentum update ----------------------------------------
-    f3h = dg3d.horizontal_advdiff(
-        geom, vgee, nl, u_pair, qbar[0], qbar[1], flux_c, nu_h,
-        bc_reflect=True)
     f3h = f3h + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
+    # hoisted: ONE mass-blocks assembly per stage, shared by the momentum
+    # and tracer implicit solves
+    M1b = vertical.mass_blocks(geom, vge1.jz, nl) if implicit else None
 
     H1 = jnp.maximum(eta1 + vg.b, cfg.h_min)
     f2d_term = jnp.stack([
@@ -254,7 +314,6 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
         # assemble (M - dt A) and solve both velocity components in one
         # cell-layout sweep: the lane axis is the cell column axis, so the
         # blocks go to the kernel as assembled — no SoA<->cell round-trip
-        M1b = vertical.mass_blocks(geom, vge1.jz, nl)
         sys = vertical.implicit_system(M1b, A_u, dtau)
         u1 = kops.block_thomas(sys, rhs_u, backend=cfg.backend)
     else:
@@ -265,21 +324,12 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
             vertical.mass_solve3d(geom, vge1.jz, rhs_u[1] + dtau * f3v[1])])
 
     # --- component 5: tracers (T & S solved together) -------------------------
-    kap_h = dg3d.okubo_kappa(geom, nl)
-    tr_pair = jnp.stack([T_e, S_e])
-    open_vals = None
-    if forcing.T_open is not None:
-        open_vals = jnp.stack([forcing.T_open, forcing.S_open])
-    f3h_tr = dg3d.horizontal_advdiff(
-        geom, vgee, nl, tr_pair, qbar[0], qbar[1], flux_c, kap_h,
-        bc_reflect=False, open_values=open_vals)
     m0tr = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.T),
                       vertical.mass_apply3d(geom, vge0.jz, st0.S)])
     rhs_tr = m0tr + dtau * f3h_tr
     A_tr = vertical.assemble_vertical_operator(
         geom, nl, vgee.jz, wrel, wface, kap, vgee.H, drag_coeff=None)
     if implicit:
-        M1b = vertical.mass_blocks(geom, vge1.jz, nl)
         sysT = vertical.implicit_system(M1b, A_tr, dtau)
         tr1 = kops.block_thomas(sysT, rhs_tr, backend=cfg.backend)
     else:

@@ -1,8 +1,10 @@
-"""Solver-backend dispatch for the ocean hot path.
+"""Kernel-backend dispatch for the ocean hot path.
 
-The paper's speed lives in the layout/solver plumbing (§2.1, §2.3-2.4), so
-which implementation of the column solves runs must be an explicit, testable
-choice rather than an accident of import order:
+The paper's speed lives in the layout/kernel plumbing (§2.1-2.4), so which
+implementation runs — the column solvers (block-Thomas, matrix-free r/w),
+the cell transpose, and the fused lateral-flux kernel
+(kernels/horizontal_flux.py) — must be an explicit, testable choice rather
+than an accident of import order:
 
   * ``Backend.REF``              — pure-jnp references (``kernels/ref.py`` /
                                    ``core/vertical.py``); XLA fuses these well

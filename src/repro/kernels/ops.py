@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import cell_transpose, column_solve, dispatch, flash_attention
-from . import matrix_free
+from . import horizontal_flux, matrix_free
 from . import ref as _ref
 from . import tridiag as _tridiag
 from . import wkv6 as _wkv6
@@ -159,6 +159,33 @@ def block_thomas(blocks, rhs, backend: dispatch.BackendLike = None):
         blocks.lo, blocks.dg, blocks.up, b,
         interpret=dispatch.interpret_flag(bk))
     return jnp.moveaxis(x, 2, 0)
+
+
+def lateral_flux_term(geom, f, fext, speed,
+                      backend: dispatch.BackendLike = None):
+    """Fused lateral advective flux term <<phi f_up speed Jl>> in SoA shapes.
+
+    f: (k, nl, 6, nt) nodal fields; fext: (k, nl, 3, 2, 2, nt) post-BC
+    neighbour nodal values (edge, a|b, top|bot) from dg3d.edge_ext_nodal6;
+    speed: (nl, 2, 3, 2, nt) signed normal flux speed shared by the k
+    fields.  Components fold into extra cell columns (speed and edge
+    weights are tiled across them); returns (k, nl, 6, nt)."""
+    from ..core import geometry as G
+    bk = dispatch.resolve(backend)
+    k, nl, _, nt = f.shape
+    fc = _fold_cols(f, k, nt)                                  # (nl*6, k*nt)
+    fe = jnp.moveaxis(fext.reshape(k, nl, 12, nt), 0, 2).reshape(nl * 12,
+                                                                 k * nt)
+    sp = jnp.tile(speed.reshape(nl * 12, nt), (1, k))
+    wq = (geom.edge_len[:, None, :]
+          * jnp.asarray(G.W_GAUSS)[:, None]).reshape(6, nt)
+    wq = jnp.tile(wq, (1, k))
+    if bk is Backend.REF:
+        out = _ref.lateral_flux_cell(fc, fe, sp, wq)
+    else:
+        out = horizontal_flux.lateral_flux_cell(
+            fc, fe, sp, wq, interpret=dispatch.interpret_flag(bk))
+    return _unfold_cols(out, k, nl, 6, nt)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,43 @@ def block_thomas_cell(lo, dg, up, b):
     return jnp.moveaxis(x, 0, 2)
 
 
+def lateral_flux_cell(f, fext, speed, wq):
+    """Lateral advective-flux term; shapes as kernels/horizontal_flux.py.
+
+    f (nl*6, C) nodal; fext (nl*12, C) neighbour nodal (e, a|b, top|bot);
+    speed (nl*12, C) at lateral qps (qz, e, qs); wq (6, C) edge weights.
+    Returns (nl*6, C): <<phi f_up speed Jl>> assembled on the 6 prism nodes.
+    """
+    import numpy as np
+    from ..core import geometry as G
+    rows, C = f.shape
+    nl = rows // 6
+    ff = f.reshape(nl, 2, 3, C)                   # (l, top|bot, node, C)
+    ext = fext.reshape(nl, 3, 2, 2, C)            # (l, e, a|b, top|bot, C)
+    sp = speed.reshape(nl, 2, 3, 2, C)            # (l, qz, e, qs, C)
+    w = wq.reshape(3, 2, C)                       # (e, qs, C)
+    # single-source quadrature constants from geometry.py
+    PZ = jnp.asarray(np.asarray(G.PHI_ZQ))        # (2qz, 2[top,bot])
+    pa, pb = G._PHIA, G._PHIB                     # (2qs,) edge basis at qps
+    # node-scatter phi tensor = _EDGE_SCATTER without its W_GAUSS factor
+    # (the Gauss weights live in wq here)
+    P = jnp.asarray(G._EDGE_SCATTER / G.W_GAUSS[None, :, None])
+    # zeta-interp to the 2 Gauss levels
+    fzi = jnp.einsum("zv,lvnc->lznc", PZ, ff)      # interior nodal at qz
+    fze = jnp.einsum("zv,lejvc->lzejc", PZ, ext)   # exterior per edge at qz
+    # edge s-interp -> (l, qz, e, qs, C)
+    fia = fzi[..., np.asarray(G.EDGE_A), :]
+    fib = fzi[..., np.asarray(G.EDGE_B), :]
+    fi = fia[..., None, :] * pa[:, None] + fib[..., None, :] * pb[:, None]
+    fe = (fze[..., 0, :][..., None, :] * pa[:, None]
+          + fze[..., 1, :][..., None, :] * pb[:, None])
+    g = jnp.where(sp > 0, fi, fe) * sp * w[None, None]
+    nodes = jnp.einsum("eqn,lzeqc->lznc", P, g)
+    top = jnp.einsum("z,lznc->lnc", PZ[:, 0], nodes)
+    bot = jnp.einsum("z,lznc->lnc", PZ[:, 1], nodes)
+    return jnp.concatenate([top, bot], axis=1).reshape(rows, C)
+
+
 def soa_to_cell(x):
     from ..core import layout
     nl, six, nt = x.shape

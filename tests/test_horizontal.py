@@ -1,0 +1,273 @@
+"""Fused horizontal-RHS pipeline tests (ISSUE 4).
+
+Covers:
+  * f64 step-equivalence of the fused pipeline (EdgeCache / TransportCache /
+    FieldStates + batched momentum/tracer RHS) vs the per-call ref path on a
+    channel mesh with interior, WALL and OPEN edges,
+  * the Pallas lateral-flux kernel vs its jnp oracle (ragged column counts)
+    and vs the qp-level lat_scatter construction,
+  * tracer constancy under exact_consistency=True through the fused +
+    kernel path,
+  * the STRUCTURAL one-per-stage interpolation reuse: exterior edge gathers
+    of jz / transport happen exactly once per stage (call-count assert),
+  * edge_scatter's unrolled scatter-tensor form vs the seed .at[].add loop.
+"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import dg2d, dg3d, geometry, horizontal, mesh2d, stepper
+from repro.core import turbulence
+from repro.core.extrusion import VGrid, layer_geometry
+from repro.kernels import horizontal_flux, ops
+from repro.kernels import ref as kref
+
+F64 = jnp.float64
+
+
+def build_channel(nl=4, nx=8, ny=3, depth=10.0):
+    m = mesh2d.channel_mesh(nx, ny, 4000.0, 900.0, jitter=0.15, seed=3)
+    geom = geometry.geom2d_from_mesh(m, dtype=F64)
+    b = jnp.full((3, m.nt), depth, F64)
+    return m, geom, VGrid(b=b, nl=nl)
+
+
+def tidal_setup(nl=4):
+    m, geom, vg = build_channel(nl=nl)
+    # the equivalence mesh must exercise every BC branch
+    et = np.asarray(m.edge_type)
+    assert (et == mesh2d.INTERIOR).any()
+    assert (et == mesh2d.WALL).any()
+    assert (et == mesh2d.OPEN).any()
+    st = stepper.init_state(geom, vg, dtype=F64)
+    eta0 = 0.05 * jnp.cos(jnp.pi * geom.node_x / 4000.0)
+    st = dataclasses.replace(st, ext=dg2d.State2D(eta0, st.ext.qx, st.ext.qy))
+    forc = stepper.Forcing3D(
+        forcing2d=dg2d.Forcing2D(eta_open=0.1 * jnp.exp(-geom.node_x / 800.0)),
+        T_open=jnp.full_like(st.T, 10.0), S_open=jnp.full_like(st.S, 35.0))
+    return geom, vg, st, forc
+
+
+def _steps(geom, vg, cfg, st, forc, n=3):
+    step = jax.jit(lambda s: stepper.step(geom, vg, cfg, s, forc))
+    for _ in range(n):
+        st = step(st)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# step-level equivalence
+# ---------------------------------------------------------------------------
+def test_step_equivalence_fused_vs_ref():
+    """Fused pipeline must reproduce the per-call ref path to f64 roundoff
+    over full steps (interior + WALL + OPEN edges, tidal forcing)."""
+    geom, vg, st, forc = tidal_setup()
+    cfg_ref = stepper.OceanConfig(nl=4, dt=20.0, m_2d=4, use_gls=True,
+                                  backend="ref", fused_horizontal=False)
+    cfg_fus = dataclasses.replace(cfg_ref, fused_horizontal=True)
+    a = _steps(geom, vg, cfg_ref, st, forc)
+    b = _steps(geom, vg, cfg_fus, st, forc)
+    for name in ("ux", "uy", "T", "S"):
+        xa, xb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        scale = max(np.abs(xa).max(), 1.0)
+        assert np.abs(xa - xb).max() < 1e-12 * scale, (
+            name, np.abs(xa - xb).max())
+    np.testing.assert_allclose(np.asarray(a.ext.eta), np.asarray(b.ext.eta),
+                               rtol=0, atol=1e-12)
+    assert np.abs(np.asarray(a.ux)).max() > 1e-6   # flow is active
+
+
+def test_step_equivalence_kernel_backend():
+    """The Pallas lateral-flux kernel path (interpret mode on CPU) must
+    match the fused ref path to f64 roundoff."""
+    geom, vg, st, forc = tidal_setup()
+    cfg_ref = stepper.OceanConfig(nl=4, dt=20.0, m_2d=4, use_gls=True,
+                                  backend="ref")
+    cfg_pal = dataclasses.replace(cfg_ref, backend="pallas_interpret")
+    a = _steps(geom, vg, cfg_ref, st, forc)
+    b = _steps(geom, vg, cfg_pal, st, forc)
+    for name in ("ux", "uy", "T", "S"):
+        xa, xb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        scale = max(np.abs(xa).max(), 1.0)
+        assert np.abs(xa - xb).max() < 1e-11 * scale, (
+            name, np.abs(xa - xb).max())
+
+
+def test_tracer_constancy_fused_exact():
+    """Regression: the fused pipeline + kernel backend must preserve the
+    machine-precision tracer constancy of the exact-consistency scheme."""
+    geom, vg, st, forc = tidal_setup()
+    cfg = stepper.OceanConfig(nl=4, dt=20.0, m_2d=4, use_gls=True,
+                              exact_consistency=True,
+                              backend="pallas_interpret")
+    out = _steps(geom, vg, cfg, st, forc, n=5)
+    assert float(jnp.abs(out.T - 10.0).max()) < 1e-10
+    assert float(jnp.abs(out.S - 35.0).max()) < 1e-10
+    assert float(jnp.abs(out.ux).max()) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle vs qp-level construction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("C", [1, 60, 129])
+def test_lateral_flux_kernel_vs_oracle_ragged(C):
+    rng = np.random.default_rng(C)
+    nl = 3
+    f = jnp.asarray(rng.normal(size=(nl * 6, C)))
+    fext = jnp.asarray(rng.normal(size=(nl * 12, C)))
+    speed = jnp.asarray(rng.normal(size=(nl * 12, C)))
+    wq = jnp.asarray(np.abs(rng.normal(size=(6, C))) + 0.1)
+    out = horizontal_flux.lateral_flux_cell(f, fext, speed, wq,
+                                            interpret=True)
+    exp = kref.lateral_flux_cell(f, fext, speed, wq)
+    assert out.shape == (nl * 6, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_lateral_flux_term_matches_qp_scatter():
+    """The SoA dispatch wrapper (oracle AND kernel) must equal the qp-level
+    construction lat_scatter(where(speed>0, fi, fe) * speed)."""
+    m, geom, vg = build_channel(nl=3)
+    nl, nt = 3, geom.nt
+    rng = np.random.default_rng(7)
+    f = jnp.asarray(rng.normal(size=(2, nl, 6, nt)))
+    speed = jnp.asarray(rng.normal(size=(nl, 2, 3, 2, nt)))
+    flux = dg3d.LateralFlux(speed=speed,
+                            upwind=(speed > 0).astype(speed.dtype))
+    fx = dg3d.edge_ext_nodal6(geom, f)
+    fi = dg3d.lat_interp(f)
+    fe = dg3d.lat_ext_from_nodal(fx)
+    exp = dg3d.lat_scatter(geom, jnp.where(flux.upwind > 0.5, fi, fe)
+                           * speed[None])
+    for backend in ("ref", "pallas_interpret"):
+        out = ops.lateral_flux_term(geom, f, fx, speed, backend=backend)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-12, atol=1e-12, err_msg=backend)
+
+
+def test_field_states_nodal_matches_qp():
+    """Nodal-gather exterior states (with wall reflection + open blend)
+    must match the seed qp-level construction."""
+    m, geom, vg = build_channel(nl=3)
+    nl, nt = 3, geom.nt
+    rng = np.random.default_rng(9)
+    f = jnp.asarray(rng.normal(size=(2, nl, 6, nt)))
+    opens = jnp.asarray(rng.normal(size=(2, nl, 6, nt)))
+    for kw in (dict(bc_reflect=True), dict(open_values=opens), dict()):
+        a = dg3d.field_states(geom, f, nodal=True, **kw)
+        b = dg3d.field_states(geom, f, nodal=False, **kw)
+        np.testing.assert_allclose(np.asarray(a.fe), np.asarray(b.fe),
+                                   rtol=1e-13, atol=1e-13, err_msg=str(kw))
+        np.testing.assert_array_equal(np.asarray(a.fi), np.asarray(b.fi))
+
+
+def test_advdiff_cached_matches_uncached():
+    """horizontal_advdiff with the full cache stack == without (ref)."""
+    m, geom, vg = build_channel(nl=4)
+    nl, nt = 4, geom.nt
+    vge = layer_geometry(vg, 0.02 * jnp.cos(geom.node_x / 500.0))
+    rng = np.random.default_rng(11)
+    r3 = lambda: jnp.asarray(rng.normal(size=(nl, 6, nt)))
+    ux, uy = 0.1 + 0.05 * r3(), 0.05 * r3()
+    u_pair = jnp.stack([ux, uy])
+    q = dg3d.transport_from_velocity(vge, ux, uy)
+    nu = jnp.abs(r3()) + 0.1
+    eta = vge.eta
+    hc = horizontal.stage_cache(geom, vge)
+    tc = horizontal.transport_cache(geom, vge, vg, hc, q[0], q[1])
+    fs = dg3d.field_states(geom, u_pair, bc_reflect=True)
+    flux_ref = dg3d.lateral_flux_speed(geom, vge, vg, q[0], q[1], eta, vg.b)
+    np.testing.assert_allclose(np.asarray(tc.flux.speed),
+                               np.asarray(flux_ref.speed),
+                               rtol=1e-13, atol=1e-14)
+    out_ref = dg3d.horizontal_advdiff(geom, vge, nl, u_pair, q[0], q[1],
+                                      flux_ref, nu, bc_reflect=True)
+    out_fus = dg3d.horizontal_advdiff(geom, vge, nl, u_pair, q[0], q[1],
+                                      tc.flux, nu, bc_reflect=True,
+                                      cache=hc, tcache=tc, fcache=fs)
+    scale = float(jnp.abs(out_ref).max())
+    np.testing.assert_allclose(np.asarray(out_fus), np.asarray(out_ref),
+                               rtol=0, atol=1e-12 * scale)
+
+
+# ---------------------------------------------------------------------------
+# structural: one-per-stage interpolation reuse (call counts)
+# ---------------------------------------------------------------------------
+def _count_stage_gathers(monkeypatch, cfg, geom, vg, st, forc):
+    """Run one eager stage and count exterior edge gathers issued by the 3D
+    horizontal pipeline (modules dg3d/horizontal; the 2D external burst is
+    excluded — its gathers are unrelated to this refactor)."""
+    counts = {"ext_interp": 0, "ext_nodal": 0}
+    orig_ext = geometry.edge_interp_ext
+    orig_nodal = dg3d.edge_ext_nodal6
+
+    def count_ext(g, f):
+        mod = sys._getframe(1).f_globals.get("__name__", "")
+        if mod in ("repro.core.dg3d", "repro.core.horizontal"):
+            counts["ext_interp"] += 1
+        return orig_ext(g, f)
+
+    def count_nodal(g, f):
+        counts["ext_nodal"] += 1
+        return orig_nodal(g, f)
+
+    monkeypatch.setattr(geometry, "edge_interp_ext", count_ext)
+    monkeypatch.setattr(dg3d, "edge_ext_nodal6", count_nodal)
+    turb0 = turbulence.TurbState(st.turb_k, st.turb_eps, st.nu_t, st.kappa_t)
+    stepper.stage(geom, vg, cfg, st, st.ux, st.uy, st.T, st.S, st.ext.eta,
+                  turb0, cfg.dt / 2, 2, True, forc)
+    return counts
+
+
+def test_stage_gather_counts(monkeypatch):
+    """THE structural assert of the tentpole: with the fused pipeline every
+    field-independent exterior edge gather happens exactly once per stage.
+
+    Fused budget (exact_consistency=True):
+      stage_cache:        jz, Jz/H, H, eta            -> 4   (jz ONCE)
+      flux speed (pred):  qx, qy                      -> 2   (per transport)
+      flux speed (qbar):  qx, qy, Qbar_x, Qbar_y      -> 4
+      pressure gradient:  rho                         -> 1
+      diffusion:          nu_h, kappa_h               -> 2
+      total edge_interp_ext                           = 13
+      field neighbour gathers (edge_ext_nodal6)       = 2   (velocity+tracer)
+
+    Seed budget: pressure 2 (rho, jz) + flux speeds 2x5 (qx, qy, Jz/H, +2)
+    + advdiff 3x3 (field, jz, nu) = 21, all at qp width."""
+    geom, vg, st, forc = tidal_setup()
+    cfg_fus = stepper.OceanConfig(nl=4, dt=20.0, m_2d=4, use_gls=True,
+                                  exact_consistency=True, backend="ref")
+    c_fus = _count_stage_gathers(monkeypatch, cfg_fus, geom, vg, st, forc)
+    assert c_fus == {"ext_interp": 13, "ext_nodal": 2}, c_fus
+
+    cfg_ref = dataclasses.replace(cfg_fus, fused_horizontal=False)
+    c_ref = _count_stage_gathers(monkeypatch, cfg_ref, geom, vg, st, forc)
+    assert c_ref == {"ext_interp": 21, "ext_nodal": 0}, c_ref
+    assert c_fus["ext_interp"] + c_fus["ext_nodal"] < c_ref["ext_interp"]
+
+
+# ---------------------------------------------------------------------------
+# edge_scatter regression (satellite: unrolled scatter tensor)
+# ---------------------------------------------------------------------------
+def test_edge_scatter_matches_seed_loop():
+    m, geom, vg = build_channel()
+    rng = np.random.default_rng(13)
+    g = jnp.asarray(rng.normal(size=(2, 4, 3, 2, geom.nt)))
+    got = geometry.edge_scatter(geom, g)
+    # the seed implementation: per-edge .at[].add accumulation
+    w = geom.edge_len[:, None, :] * jnp.asarray(geometry.W_GAUSS)[:, None]
+    ga = (g * w * geometry._PHIA[:, None]).sum(axis=-2)
+    gb = (g * w * geometry._PHIB[:, None]).sum(axis=-2)
+    exp = jnp.zeros_like(ga)
+    for e in range(3):
+        exp = exp.at[..., geometry.EDGE_A[e], :].add(ga[..., e, :])
+        exp = exp.at[..., geometry.EDGE_B[e], :].add(gb[..., e, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-13, atol=1e-13)
