@@ -15,6 +15,15 @@ continuity RHS) three ways over nl in {4, 8, 16}:
 Rows: name,us_per_call,derived.  Also writes BENCH_horizontal.json (list of
 row dicts incl. speedup and max|fused-ref|) so the perf trajectory of the
 model's hottest loop is machine-readable from this PR onward.
+
+Observability additions (obs/):
+  * every timing row carries p50/p90 spread (common.Timing) and the
+    roofline view from the compiled HLO — modelled bytes, achieved vs
+    platform-bound bandwidth (`roofline.analysis.peak_bandwidth`),
+  * `--trace` wraps the run in `obs.trace.trace_session` (profile lands in
+    the run dir),
+  * a per-component nl=16 seed-vs-fused breakdown (kind="breakdown" rows)
+    records WHERE the fused pipeline wins — diagnosis artifact only.
 """
 from __future__ import annotations
 
@@ -27,6 +36,9 @@ import numpy as np
 from repro.core import dg3d, geometry, horizontal, mesh2d
 from repro.core.extrusion import VGrid, layer_geometry
 from repro.kernels import dispatch
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.roofline import analysis as roofline
 
 from .common import row, time_fn
 
@@ -220,45 +232,175 @@ def _maxdiff(a, b):
                / max(float(jnp.abs(x).max()), 1e-30) for x, y in zip(a, b))
 
 
+def _hlo_bytes(jitted, *args):
+    """Modelled HBM/host-memory traffic (bytes) of the compiled program."""
+    try:
+        compiled = jitted.lower(*args).compile()
+        return float(roofline.analyze_hlo_text(compiled.as_text()).bytes)
+    except Exception:
+        return None
+
+
+def _roofline_fields(t, nbytes, bound):
+    """achieved-vs-bound bandwidth fields for one timing row."""
+    if nbytes is None or t <= 0:
+        return dict(hlo_bytes=None, achieved_gbps=None,
+                    bound_gbps=bound / 1e9, roofline_frac=None)
+    achieved = nbytes / float(t)
+    return dict(hlo_bytes=nbytes, achieved_gbps=achieved / 1e9,
+                bound_gbps=bound / 1e9, roofline_frac=achieved / bound)
+
+
+def _breakdown(nl, warmup, iters, bound):
+    """Per-component seed-vs-fused timing at one layer count.
+
+    Diagnosis artifact only: upstream values (caches, flux speeds, field
+    states) are precomputed and passed as runtime arguments, so each row
+    isolates ONE pipeline component."""
+    geom, vg, vge, eta, ux, uy, T, S, rho = _setup(nl)
+    nt = geom.nt
+    q = jax.jit(dg3d.transport_from_velocity)(vge, ux, uy)
+    qbx, qby = _corrected_transport(q, nl)
+    nu_h = jax.jit(dg3d.smagorinsky_nu)(geom, ux, uy)
+    kap_h = dg3d.okubo_kappa(geom, nl)
+    u_pair = jnp.stack([ux, uy])
+    tr_pair = jnp.stack([T, S])
+    jfs = jax.jit(lambda u: dg3d.field_states(geom, u, bc_reflect=True))
+    fs_u = jfs(u_pair)
+    jhc = jax.jit(lambda e: horizontal.stage_cache(geom, e))
+    hc = jhc(vge)
+    jtc = jax.jit(lambda e, c, qx, qy:
+                  horizontal.transport_cache(geom, e, vg, c, qx, qy))
+    tc1 = jtc(vge, hc, q[0], q[1])
+    tc2 = jtc(vge, hc, qbx, qby)
+    jflux = jax.jit(lambda e, qx, qy, et:
+                    dg3d.lateral_flux_speed(geom, e, vg, qx, qy, et, vg.b))
+    flux1 = jflux(vge, q[0], q[1], eta)
+    flux2 = jflux(vge, qbx, qby, eta)
+    jdiff = jax.jit(lambda e, u, nu, c, fs: dg3d.horizontal_diffusion(
+        geom, e, nl, u, nu, cache=c, fcache=fs))
+    diff_u = jdiff(vge, u_pair, nu_h, hc, fs_u)
+
+    comps = [
+        ("seed", "flux_speed",
+         jflux, (vge, qbx, qby, eta)),
+        ("seed", "advdiff_pred",
+         jax.jit(lambda e, u, qx, qy, fl, nu: _seed_advdiff(
+             geom, e, nl, u, qx, qy, fl, nu, bc_reflect=True)),
+         (vge, u_pair, q[0], q[1], flux1, nu_h)),
+        ("seed", "advdiff_mom",
+         jax.jit(lambda e, u, qx, qy, fl, nu: _seed_advdiff(
+             geom, e, nl, u, qx, qy, fl, nu, bc_reflect=True)),
+         (vge, u_pair, qbx, qby, flux2, nu_h)),
+        ("seed", "advdiff_tracers",
+         jax.jit(lambda e, f, qx, qy, fl, kp: _seed_advdiff(
+             geom, e, nl, f, qx, qy, fl, kp, bc_reflect=False)),
+         (vge, tr_pair, qbx, qby, flux2, kap_h)),
+        ("seed", "continuity",
+         jax.jit(lambda e, qx, qy, fl: _seed_continuity(
+             geom, e, nl, qx, qy, fl)),
+         (vge, qbx, qby, flux2)),
+        ("seed", "pressure_grad",
+         jax.jit(lambda e, r: dg3d.pressure_gradient_rhs(geom, vg, e, r)),
+         (vge, rho)),
+        ("fused", "stage_cache", jhc, (vge,)),
+        ("fused", "field_states", jfs, (u_pair,)),
+        ("fused", "transport_caches",
+         jax.jit(lambda e, c, qx, qy, qbx_, qby_: (
+             horizontal.transport_cache(geom, e, vg, c, qx, qy),
+             horizontal.transport_cache(geom, e, vg, c, qbx_, qby_))),
+         (vge, hc, q[0], q[1], qbx, qby)),
+        ("fused", "diffusion", jdiff, (vge, u_pair, nu_h, hc, fs_u)),
+        ("fused", "advection_pred",
+         jax.jit(lambda e, u, qx, qy, tc, fs: dg3d.horizontal_advection(
+             geom, e, nl, u, qx, qy, tc.flux, tcache=tc, fcache=fs,
+             backend="ref")),
+         (vge, u_pair, q[0], q[1], tc1, fs_u)),
+        ("fused", "advdiff_mom_tracers",
+         jax.jit(lambda e, u, tr, qx, qy, tc, fs, du, c:
+                 horizontal.advdiff_momentum_tracers(
+                     geom, e, nl, u, tr, qx, qy, tc.flux, nu_h, kap_h,
+                     fs_u=fs, diff_u=du, cache=c, tcache=tc, backend="ref")),
+         (vge, u_pair, tr_pair, qbx, qby, tc2, fs_u, diff_u, hc)),
+        ("fused", "continuity",
+         jax.jit(lambda e, qx, qy, tc: dg3d.continuity_rhs(
+             geom, e, nl, qx, qy, tc.flux, tcache=tc)),
+         (vge, qbx, qby, tc2)),
+        ("fused", "pressure_grad",
+         jax.jit(lambda e, r, c: dg3d.pressure_gradient_rhs(
+             geom, vg, e, r, cache=c)),
+         (vge, rho, hc)),
+    ]
+    records = []
+    for path, comp, fn, fargs in comps:
+        t = time_fn(fn, *fargs, warmup=warmup, iters=iters, reduce="min")
+        rec = dict(kind="breakdown", path=path, component=comp, nl=nl, nt=nt,
+                   us_per_call=t * 1e6, p50_us=t.p50 * 1e6,
+                   p90_us=t.p90 * 1e6)
+        rec.update(_roofline_fields(t, _hlo_bytes(fn, *fargs), bound))
+        row(f"breakdown_nl{nl}_{path}_{comp}", t * 1e6, "")
+        records.append(rec)
+    return records
+
+
 def run(layers=LAYERS, json_path="BENCH_horizontal.json", dry_run=False,
-        warmup=3, iters=9):
+        warmup=3, iters=9, breakdown_nl=16, trace=False):
     interp = dispatch.interpret_default()
     kmode = "interpret" if interp else "compiled"
     kbackend = "pallas_interpret" if interp else "pallas"
+    bound = roofline.peak_bandwidth()
+    reg = obs_metrics.default()
     if dry_run:
         # compile/shape smoke only: tiny mesh, one iteration, no JSON (do
         # not clobber a real perf record with smoke numbers)
         layers, warmup, iters, json_path = [layers[0]], 1, 1, None
+        breakdown_nl = None
     records = []
-    for nl in layers:
-        geom, vg, vge, eta, ux, uy, T, S, rho = _setup(
-            nl, nx=8 if dry_run else 24, ny=6 if dry_run else 18)
-        nt = geom.nt
-        args = (ux, uy, T, S, eta, rho)
-        f_ref = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
-                        rhs_ref(g, v, e, n, *a))
-        f_fus = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
-                        rhs_fused(g, v, e, n, *a, backend="ref"))
-        f_pal = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
-                        rhs_fused(g, v, e, n, *a, backend=kbackend))
-        out_ref = f_ref(*args)
-        diff_fus = _maxdiff(out_ref, f_fus(*args))
-        diff_pal = _maxdiff(out_ref, f_pal(*args))
-        t_ref = time_fn(f_ref, *args, warmup=warmup, iters=iters, reduce="min")
-        t_fus = time_fn(f_fus, *args, warmup=warmup, iters=iters, reduce="min")
-        t_pal = time_fn(f_pal, *args, warmup=warmup, iters=iters, reduce="min")
-        for name, t, diff, extra in (
-                ("ref", t_ref, 0.0, ""),
-                ("fused", t_fus, diff_fus,
-                 f"speedup_vs_ref={t_ref / t_fus:.2f}x"),
-                (f"pallas_{kmode}", t_pal, diff_pal,
-                 f"speedup_vs_ref={t_ref / t_pal:.2f}x")):
-            derived = f"maxdiff={diff:.2e}" + (f";{extra}" if extra else "")
-            row(f"horizontal_rhs_nl{nl}_nt{nt}_{name}", t * 1e6, derived)
-            records.append(dict(name=name, nl=nl, nt=nt,
-                                us_per_call=t * 1e6,
-                                speedup_vs_ref=t_ref / t,
-                                maxdiff_vs_ref=diff))
+    with obs_trace.trace_session(enabled=trace) as run_dir:
+        if run_dir:
+            print(f"# profile -> {run_dir}", flush=True)
+        for nl in layers:
+            geom, vg, vge, eta, ux, uy, T, S, rho = _setup(
+                nl, nx=8 if dry_run else 24, ny=6 if dry_run else 18)
+            nt = geom.nt
+            args = (ux, uy, T, S, eta, rho)
+            f_ref = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                            rhs_ref(g, v, e, n, *a))
+            f_fus = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                            rhs_fused(g, v, e, n, *a, backend="ref"))
+            f_pal = jax.jit(lambda *a, g=geom, v=vg, e=vge, n=nl:
+                            rhs_fused(g, v, e, n, *a, backend=kbackend))
+            out_ref = f_ref(*args)
+            diff_fus = _maxdiff(out_ref, f_fus(*args))
+            diff_pal = _maxdiff(out_ref, f_pal(*args))
+            t_ref = time_fn(f_ref, *args, warmup=warmup, iters=iters,
+                            reduce="min")
+            t_fus = time_fn(f_fus, *args, warmup=warmup, iters=iters,
+                            reduce="min")
+            t_pal = time_fn(f_pal, *args, warmup=warmup, iters=iters,
+                            reduce="min")
+            bytes_by = {"ref": _hlo_bytes(f_ref, *args),
+                        "fused": _hlo_bytes(f_fus, *args),
+                        f"pallas_{kmode}": _hlo_bytes(f_pal, *args)}
+            for name, t, diff, extra in (
+                    ("ref", t_ref, 0.0, ""),
+                    ("fused", t_fus, diff_fus,
+                     f"speedup_vs_ref={t_ref / t_fus:.2f}x"),
+                    (f"pallas_{kmode}", t_pal, diff_pal,
+                     f"speedup_vs_ref={t_ref / t_pal:.2f}x")):
+                derived = f"maxdiff={diff:.2e}" + (f";{extra}" if extra
+                                                   else "")
+                row(f"horizontal_rhs_nl{nl}_nt{nt}_{name}", t * 1e6, derived)
+                rec = dict(name=name, nl=nl, nt=nt,
+                           us_per_call=t * 1e6,
+                           p50_us=t.p50 * 1e6, p90_us=t.p90 * 1e6,
+                           speedup_vs_ref=t_ref / t,
+                           maxdiff_vs_ref=diff)
+                rec.update(_roofline_fields(t, bytes_by[name], bound))
+                records.append(rec)
+                reg.event("bench.horizontal_rhs", rec)
+        if breakdown_nl:
+            records += _breakdown(breakdown_nl, warmup, iters, bound)
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(records, fh, indent=2)
@@ -270,7 +412,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny mesh, 1 iter: compile/shape smoke for CI")
+    ap.add_argument("--trace", action="store_true",
+                    help="wrap the run in a jax.profiler trace session")
     ap.add_argument("--json", default="BENCH_horizontal.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(json_path=args.json, dry_run=args.dry_run)
+    run(json_path=args.json, dry_run=args.dry_run, trace=args.trace)

@@ -8,23 +8,63 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def block_tree(out):
+    """Block until every array leaf of an arbitrary pytree is ready.
+
+    `jax.block_until_ready` handles pytrees too, but walking the leaves and
+    skipping non-blockable ones (python scalars, None, strings in result
+    dicts) keeps this robust for any benchmark return value."""
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+class Timing(float):
+    """A float (the `reduce` statistic, seconds) carrying the full sample
+    spread as attributes — existing callers keep doing float arithmetic,
+    artifact writers pick up p50/p90."""
+    p50: float
+    p90: float
+    min: float
+    mean: float
+    n: int
+
+    def __new__(cls, primary, samples):
+        self = super().__new__(cls, primary)
+        s = np.sort(np.asarray(samples, dtype=float))
+        self.p50 = float(np.percentile(s, 50))
+        self.p90 = float(np.percentile(s, 90))
+        self.min = float(s[0])
+        self.mean = float(s.mean())
+        self.n = int(s.size)
+        return self
+
+    def stats(self) -> dict:
+        """Plain-dict form for JSON artifact rows (values in seconds)."""
+        return {"p50": self.p50, "p90": self.p90, "min": self.min,
+                "mean": self.mean, "n": self.n}
+
+
 def time_fn(fn, *args, warmup=2, iters=5, reduce="median", **kw):
-    """Wall time of fn(*args) with block_until_ready, in seconds.
+    """Wall time of fn(*args) with full-pytree block_until_ready, in seconds.
+
+    Returns a `Timing` (a float subclass): the value is the `reduce`
+    statistic, and .p50/.p90/.min/.mean/.n carry the sample spread.
 
     reduce: "median" (default) or "min" — min is the robust choice on noisy
     shared machines (any sample is an upper bound on the true cost)."""
     if reduce not in ("median", "min"):
         raise ValueError(f"reduce must be 'median' or 'min', got {reduce!r}")
     for _ in range(warmup):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
+        block_tree(fn(*args, **kw))
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
+        block_tree(fn(*args, **kw))
         ts.append(time.perf_counter() - t0)
-    return float(min(ts) if reduce == "min" else np.median(ts))
+    primary = float(min(ts) if reduce == "min" else np.median(ts))
+    return Timing(primary, ts)
 
 
 def row(name: str, us_per_call: float, derived: str = ""):

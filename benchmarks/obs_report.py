@@ -1,0 +1,174 @@
+"""Flight-recorder report CLI: summarise runs, diff bench artifacts.
+
+    python -m benchmarks.obs_report summary  runs/obs/metrics.jsonl
+    python -m benchmarks.obs_report validate runs/obs/metrics.jsonl
+    python -m benchmarks.obs_report diff     old/BENCH_horizontal.json \
+                                             new/BENCH_horizontal.json \
+                                             [--fail --threshold 0.10]
+
+`summary` renders a JSONL metrics stream (kind-aware: counters/gauges as
+tables, histogram p50/p90, last physics diagnostics, monitor violations).
+`diff` matches bench rows on their identity fields (name/nl/nt or
+path/component) and reports the per-row time ratio; with `--fail`, any row
+slower than (1 + threshold)x the baseline exits non-zero — a perf gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.obs import schema
+
+
+# ---------------------------------------------------------------------------
+# summary
+# ---------------------------------------------------------------------------
+def _load_jsonl(path: str) -> List[dict]:
+    recs = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    return recs
+
+
+def _fmt_labels(rec: dict) -> str:
+    lbl = rec.get("labels") or {}
+    if not lbl:
+        return rec["name"]
+    inner = ",".join(f"{k}={v}" for k, v in sorted(lbl.items()))
+    return f"{rec['name']}{{{inner}}}"
+
+
+def summary(path: str, out=sys.stdout) -> int:
+    recs = _load_jsonl(path)
+    by_kind: Dict[str, List[dict]] = {}
+    for r in recs:
+        by_kind.setdefault(r.get("kind", "?"), []).append(r)
+    print(f"# {path}: {len(recs)} records", file=out)
+    # counters/gauges: last value per instrument
+    for kind in ("counter", "gauge"):
+        last: Dict[str, Any] = {}
+        for r in by_kind.get(kind, []):
+            last[_fmt_labels(r)] = r.get("value")
+        if last:
+            print(f"\n[{kind}s]", file=out)
+            for k in sorted(last):
+                print(f"  {k} = {last[k]}", file=out)
+    hists: Dict[str, dict] = {}
+    for r in by_kind.get("histogram", []):
+        hists[_fmt_labels(r)] = r.get("value") or {}
+    if hists:
+        print("\n[histograms]", file=out)
+        for k in sorted(hists):
+            v = hists[k]
+            print(f"  {k}: n={v.get('count')} p50={v.get('p50'):.6g} "
+                  f"p90={v.get('p90'):.6g} max={v.get('max'):.6g}", file=out)
+    diags = by_kind.get("diagnostics", [])
+    if diags:
+        d = diags[-1]
+        print(f"\n[diagnostics] last @ step {d.get('step')}:", file=out)
+        for k, v in sorted((d.get("value") or {}).items()):
+            print(f"  {k} = {v}", file=out)
+    events = by_kind.get("event", [])
+    viols = [e for e in events if e["name"] == "monitor.violation"]
+    if events:
+        print(f"\n[events] {len(events)} total, "
+              f"{len(viols)} monitor violations", file=out)
+        for e in viols:
+            print(f"  step {e.get('step')}: {e.get('value')}", file=out)
+    return 1 if viols else 0
+
+
+def validate(path: str, out=sys.stdout) -> int:
+    n_ok, errors = schema.validate_file(path)
+    print(f"{path}: {n_ok} valid records, {len(errors)} errors", file=out)
+    for lineno, err in errors[:20]:
+        print(f"  line {lineno}: {err}", file=out)
+    return 1 if errors else 0
+
+
+# ---------------------------------------------------------------------------
+# diff
+# ---------------------------------------------------------------------------
+def _row_key(rec: dict) -> Tuple:
+    if rec.get("kind") == "breakdown":
+        return ("breakdown", rec.get("path"), rec.get("component"),
+                rec.get("nl"))
+    return (rec.get("name"), rec.get("nl"), rec.get("nt"))
+
+
+def diff_records(old: List[dict], new: List[dict]) -> List[dict]:
+    """Match rows by identity, compute time ratio new/old (>1 = slower)."""
+    old_by = {_row_key(r): r for r in old}
+    rows = []
+    for r in new:
+        k = _row_key(r)
+        o = old_by.get(k)
+        if o is None or not o.get("us_per_call") or not r.get("us_per_call"):
+            continue
+        rows.append(dict(
+            key="/".join(str(x) for x in k if x is not None),
+            old_us=o["us_per_call"], new_us=r["us_per_call"],
+            ratio=r["us_per_call"] / o["us_per_call"]))
+    return rows
+
+
+def diff(old_path: str, new_path: str, threshold: float = 0.10,
+         fail: bool = False, out=sys.stdout) -> int:
+    with open(old_path) as fh:
+        old = json.load(fh)
+    with open(new_path) as fh:
+        new = json.load(fh)
+    rows = diff_records(old, new)
+    if not rows:
+        print("no matching rows", file=out)
+        return 2
+    print(f"# {new_path} vs {old_path} ({len(rows)} matched rows)", file=out)
+    print(f"{'row':<48} {'old_us':>10} {'new_us':>10} {'ratio':>7}",
+          file=out)
+    regressions = []
+    for r in sorted(rows, key=lambda r: -r["ratio"]):
+        mark = ""
+        if r["ratio"] > 1.0 + threshold:
+            mark = "  <-- slower"
+            regressions.append(r)
+        elif r["ratio"] < 1.0 - threshold:
+            mark = "  (faster)"
+        print(f"{r['key']:<48} {r['old_us']:>10.1f} {r['new_us']:>10.1f} "
+              f"{r['ratio']:>6.2f}x{mark}", file=out)
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed beyond "
+              f"{threshold:.0%}", file=out)
+        if fail:
+            return 1
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="obs_report")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ps = sub.add_parser("summary", help="render a metrics JSONL stream")
+    ps.add_argument("path")
+    pv = sub.add_parser("validate", help="schema-check a metrics JSONL")
+    pv.add_argument("path")
+    pd = sub.add_parser("diff", help="diff two BENCH_*.json artifacts")
+    pd.add_argument("old")
+    pd.add_argument("new")
+    pd.add_argument("--threshold", type=float, default=0.10,
+                    help="relative slowdown that counts as a regression")
+    pd.add_argument("--fail", action="store_true",
+                    help="exit 1 if any row regresses beyond threshold")
+    args = ap.parse_args(argv)
+    if args.cmd == "summary":
+        return summary(args.path)
+    if args.cmd == "validate":
+        return validate(args.path)
+    return diff(args.old, args.new, threshold=args.threshold, fail=args.fail)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -174,178 +174,197 @@ def stage(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st0: OceanState,
     # edge interpolations are computed HERE exactly once and shared by the
     # pressure gradient, both flux speeds, the continuity RHS and both
     # advdiff calls below (core/horizontal.py).
-    hc = (horizontal.stage_cache(geom, vgee, cfg.h_min)
-          if cfg.fused_horizontal else None)
+    with jax.named_scope("stage.edge_cache"):
+        hc = (horizontal.stage_cache(geom, vgee, cfg.h_min)
+              if cfg.fused_horizontal else None)
 
     # --- density, pressure gradient r (matrix-free solve) -------------------
-    rho = eos.rho_prime(S_e, T_e, _pressure_dbar(vg, vgee), cfg.eos_kind)
-    F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho, cache=hc)
-    r = kops.solve_r(geom, F_r, r_s, backend=cfg.backend)  # (2, nl, 6, nt)
+    with jax.named_scope("stage.pressure_gradient"):
+        rho = eos.rho_prime(S_e, T_e, _pressure_dbar(vg, vgee), cfg.eos_kind)
+        F_r, r_s = dg3d.pressure_gradient_rhs(geom, vg, vgee, rho, cache=hc)
+        r = kops.solve_r(geom, F_r, r_s, backend=cfg.backend)  # (2,nl,6,nt)
 
     # --- component 1: horizontal flux prediction (with q, not qbar) ---------
-    q = dg3d.transport_from_velocity(vgee, ux_e, uy_e)
-    if hc is not None:
-        tc_pred = horizontal.transport_cache(
-            geom, vgee, vg, hc, q[0], q[1], h_min=cfg.h_min)
-        flux_pred = tc_pred.flux
-    else:
-        tc_pred = None
-        flux_pred = dg3d.lateral_flux_speed(
-            geom, vgee, vg, q[0], q[1], eta_e, vg.b, h_min=cfg.h_min)
-    nu_h = dg3d.smagorinsky_nu(geom, ux_e, uy_e, cfg.cs_smag)
-    u_pair = jnp.stack([ux_e, uy_e])
-    if hc is not None:
-        # FieldStates of the evaluation velocity + its diffusion term, built
-        # ONCE: the prediction and the momentum-update advdiff interpolate
-        # the same fields, and the diffusion is flux-independent
-        fs_u = dg3d.field_states(geom, u_pair, bc_reflect=True)
-        diff_u = dg3d.horizontal_diffusion(geom, vgee, nl, u_pair, nu_h,
-                                           cache=hc, fcache=fs_u)
-        f3h_pred = dg3d.horizontal_advection(
-            geom, vgee, nl, u_pair, q[0], q[1], flux_pred,
-            tcache=tc_pred, fcache=fs_u, backend=cfg.backend) + diff_u
-    else:
-        fs_u = diff_u = None
-        f3h_pred = dg3d.horizontal_advdiff(
-            geom, vgee, nl, u_pair, q[0], q[1], flux_pred, nu_h,
-            bc_reflect=True)
-    f3h_pred = f3h_pred + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
+    with jax.named_scope("stage.flux_prediction"):
+        q = dg3d.transport_from_velocity(vgee, ux_e, uy_e)
+        if hc is not None:
+            tc_pred = horizontal.transport_cache(
+                geom, vgee, vg, hc, q[0], q[1], h_min=cfg.h_min)
+            flux_pred = tc_pred.flux
+        else:
+            tc_pred = None
+            flux_pred = dg3d.lateral_flux_speed(
+                geom, vgee, vg, q[0], q[1], eta_e, vg.b, h_min=cfg.h_min)
+        nu_h = dg3d.smagorinsky_nu(geom, ux_e, uy_e, cfg.cs_smag)
+        u_pair = jnp.stack([ux_e, uy_e])
+        if hc is not None:
+            # FieldStates of the evaluation velocity + its diffusion term,
+            # built ONCE: the prediction and the momentum-update advdiff
+            # interpolate the same fields, and the diffusion is
+            # flux-independent
+            fs_u = dg3d.field_states(geom, u_pair, bc_reflect=True)
+            diff_u = dg3d.horizontal_diffusion(geom, vgee, nl, u_pair, nu_h,
+                                               cache=hc, fcache=fs_u)
+            f3h_pred = dg3d.horizontal_advection(
+                geom, vgee, nl, u_pair, q[0], q[1], flux_pred,
+                tcache=tc_pred, fcache=fs_u, backend=cfg.backend) + diff_u
+        else:
+            fs_u = diff_u = None
+            f3h_pred = dg3d.horizontal_advdiff(
+                geom, vgee, nl, u_pair, q[0], q[1], flux_pred, nu_h,
+                bc_reflect=True)
+        f3h_pred = f3h_pred + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
 
-    # F_3D->2D: vertical sum + wind + (predicted) bottom drag
-    drag = _bottom_drag_coeff(cfg, ux_e, uy_e)
-    dq = G.vol_interp(drag)
-    ubq = G.vol_interp(ux_e[-1, 3:6, :])
-    vbq = G.vol_interp(uy_e[-1, 3:6, :])
-    f3d2d_x = vsum_dofs(f3h_pred[0]) - G.vol_scatter(geom, dq * ubq)
-    f3d2d_y = vsum_dofs(f3h_pred[1]) - G.vol_scatter(geom, dq * vbq)
-    if forcing.tau_x is not None:
-        f3d2d_x = f3d2d_x + G.mass_apply(geom, forcing.tau_x)
-        f3d2d_y = f3d2d_y + G.mass_apply(geom, forcing.tau_y)
+        # F_3D->2D: vertical sum + wind + (predicted) bottom drag
+        drag = _bottom_drag_coeff(cfg, ux_e, uy_e)
+        dq = G.vol_interp(drag)
+        ubq = G.vol_interp(ux_e[-1, 3:6, :])
+        vbq = G.vol_interp(uy_e[-1, 3:6, :])
+        f3d2d_x = vsum_dofs(f3h_pred[0]) - G.vol_scatter(geom, dq * ubq)
+        f3d2d_y = vsum_dofs(f3h_pred[1]) - G.vol_scatter(geom, dq * vbq)
+        if forcing.tau_x is not None:
+            f3d2d_x = f3d2d_x + G.mass_apply(geom, forcing.tau_x)
+            f3d2d_y = f3d2d_y + G.mass_apply(geom, forcing.tau_y)
 
     # --- component 2: external mode burst ------------------------------------
-    ext = dg2d.run_external(geom, vg.b, st0.ext, dtau, m_sub,
-                            forcing.forcing2d, f3d2d_x, f3d2d_y,
-                            h_min=cfg.h_min, exchange_fn=exchange2d,
-                            exchange_period=cfg.halo_exchange_period)
-    eta1 = ext.state.eta
-    vge1 = layer_geometry(vg, eta1, cfg.h_min)
+    with jax.named_scope("stage.external_burst"):
+        ext = dg2d.run_external(geom, vg.b, st0.ext, dtau, m_sub,
+                                forcing.forcing2d, f3d2d_x, f3d2d_y,
+                                h_min=cfg.h_min, exchange_fn=exchange2d,
+                                exchange_period=cfg.halo_exchange_period)
+        eta1 = ext.state.eta
+        vge1 = layer_geometry(vg, eta1, cfg.h_min)
 
     # --- component 3: turbulence ---------------------------------------------
-    dz = jnp.maximum(vgee.H.mean(axis=0, keepdims=True), cfg.h_min) / nl  # (1, nt)
-    if cfg.use_gls and implicit:
-        m2, n2 = turbulence.shear_and_buoyancy(ux_e, uy_e, rho, dz)
-        turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
-    else:
-        turb1 = turb0
-    turb_used = turb1 if implicit else turb0
-    kv = turbulence.to_nodes(turb_used.nu_t) + cfg.nu_v_bg
-    kap = turbulence.to_nodes(turb_used.kappa_t) + cfg.kappa_v_bg
+    with jax.named_scope("stage.turbulence"):
+        dz = jnp.maximum(vgee.H.mean(axis=0, keepdims=True),
+                         cfg.h_min) / nl                         # (1, nt)
+        if cfg.use_gls and implicit:
+            m2, n2 = turbulence.shear_and_buoyancy(ux_e, uy_e, rho, dz)
+            turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
+        else:
+            turb1 = turb0
+        turb_used = turb1 if implicit else turb0
+        kv = turbulence.to_nodes(turb_used.nu_t) + cfg.nu_v_bg
+        kap = turbulence.to_nodes(turb_used.kappa_t) + cfg.kappa_v_bg
 
     # --- consistent transport, vertical velocity, mesh velocity --------------
-    qbar = dg3d.consistent_transport(vgee, ux_e, uy_e, ext.q_bar_x,
-                                     ext.q_bar_y, nl)
-    fb_kw = (dict(fbar_edge=ext.fbar_edge,
-                  qbar2d=(ext.q_bar_x, ext.q_bar_y))
-             if cfg.exact_consistency else {})
-    if hc is not None:
-        tc = horizontal.transport_cache(
-            geom, vgee, vg, hc, qbar[0], qbar[1],
-            h_min=cfg.h_min, **fb_kw)
-        flux_c = tc.flux
-    else:
-        tc = None
-        flux_c = dg3d.lateral_flux_speed(
-            geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b,
-            h_min=cfg.h_min, **fb_kw)
-    w_t = kops.solve_w(
-        geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1], flux_c,
-                                  tcache=tc),
-        backend=cfg.backend)
+    with jax.named_scope("stage.w_solve"):
+        qbar = dg3d.consistent_transport(vgee, ux_e, uy_e, ext.q_bar_x,
+                                         ext.q_bar_y, nl)
+        fb_kw = (dict(fbar_edge=ext.fbar_edge,
+                      qbar2d=(ext.q_bar_x, ext.q_bar_y))
+                 if cfg.exact_consistency else {})
+        if hc is not None:
+            tc = horizontal.transport_cache(
+                geom, vgee, vg, hc, qbar[0], qbar[1],
+                h_min=cfg.h_min, **fb_kw)
+            flux_c = tc.flux
+        else:
+            tc = None
+            flux_c = dg3d.lateral_flux_speed(
+                geom, vgee, vg, qbar[0], qbar[1], eta_e, vg.b,
+                h_min=cfg.h_min, **fb_kw)
+        w_t = kops.solve_w(
+            geom, dg3d.continuity_rhs(geom, vgee, nl, qbar[0], qbar[1],
+                                      flux_c, tcache=tc),
+            backend=cfg.backend)
 
-    wm_i = mesh_velocity(vg, st0.ext.eta, eta1, dtau)    # (nl+1, 3, nt)
-    wm_nodes = jnp.concatenate([wm_i[:-1], wm_i[1:]], axis=1)
-    wrel = w_t - wm_nodes
-    # interface advective speeds: value from BELOW each interface
-    wface = w_t[:, 0:3, :] - wm_i[:-1]                   # (nl, 3, nt)
-    wface = jnp.concatenate(
-        [wface, jnp.zeros((1, 3, nt), wface.dtype)], axis=0)  # floor: 0
+        wm_i = mesh_velocity(vg, st0.ext.eta, eta1, dtau)    # (nl+1, 3, nt)
+        wm_nodes = jnp.concatenate([wm_i[:-1], wm_i[1:]], axis=1)
+        wrel = w_t - wm_nodes
+        # interface advective speeds: value from BELOW each interface
+        wface = w_t[:, 0:3, :] - wm_i[:-1]                   # (nl, 3, nt)
+        wface = jnp.concatenate(
+            [wface, jnp.zeros((1, 3, nt), wface.dtype)], axis=0)  # floor: 0
 
     # --- components 4+5 horizontal RHS: momentum + tracers ------------------
-    kap_h = dg3d.okubo_kappa(geom, nl)
-    tr_pair = jnp.stack([T_e, S_e])
-    open_vals = None
-    if forcing.T_open is not None:
-        open_vals = jnp.stack([forcing.T_open, forcing.S_open])
-    if hc is not None:
-        # momentum + tracers share flux_c; velocity FieldStates and the
-        # momentum diffusion are reused from the prediction call
-        f3h, f3h_tr = horizontal.advdiff_momentum_tracers(
-            geom, vgee, nl, u_pair, tr_pair, qbar[0], qbar[1], flux_c,
-            nu_h, kap_h, fs_u=fs_u, diff_u=diff_u, open_tr=open_vals,
-            cache=hc, tcache=tc, backend=cfg.backend)
-    else:
-        f3h = dg3d.horizontal_advdiff(
-            geom, vgee, nl, u_pair, qbar[0], qbar[1], flux_c, nu_h,
-            bc_reflect=True)
-        f3h_tr = dg3d.horizontal_advdiff(
-            geom, vgee, nl, tr_pair, qbar[0], qbar[1], flux_c, kap_h,
-            bc_reflect=False, open_values=open_vals)
+    with jax.named_scope("stage.horizontal_rhs"):
+        kap_h = dg3d.okubo_kappa(geom, nl)
+        tr_pair = jnp.stack([T_e, S_e])
+        open_vals = None
+        if forcing.T_open is not None:
+            open_vals = jnp.stack([forcing.T_open, forcing.S_open])
+        if hc is not None:
+            # momentum + tracers share flux_c; velocity FieldStates and the
+            # momentum diffusion are reused from the prediction call
+            f3h, f3h_tr = horizontal.advdiff_momentum_tracers(
+                geom, vgee, nl, u_pair, tr_pair, qbar[0], qbar[1], flux_c,
+                nu_h, kap_h, fs_u=fs_u, diff_u=diff_u, open_tr=open_vals,
+                cache=hc, tcache=tc, backend=cfg.backend)
+        else:
+            f3h = dg3d.horizontal_advdiff(
+                geom, vgee, nl, u_pair, qbar[0], qbar[1], flux_c, nu_h,
+                bc_reflect=True)
+            f3h_tr = dg3d.horizontal_advdiff(
+                geom, vgee, nl, tr_pair, qbar[0], qbar[1], flux_c, kap_h,
+                bc_reflect=False, open_values=open_vals)
 
     # --- component 4: momentum update ----------------------------------------
-    f3h = f3h + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
-    # hoisted: ONE mass-blocks assembly per stage, shared by the momentum
-    # and tracer implicit solves
-    M1b = vertical.mass_blocks(geom, vge1.jz, nl) if implicit else None
+    with jax.named_scope("stage.momentum_update"):
+        f3h = f3h + _momentum_extra(geom, vgee, cfg, r, ux_e, uy_e)
+        # hoisted: ONE mass-blocks assembly per stage, shared by the momentum
+        # and tracer implicit solves
+        M1b = vertical.mass_blocks(geom, vge1.jz, nl) if implicit else None
 
-    H1 = jnp.maximum(eta1 + vg.b, cfg.h_min)
-    f2d_term = jnp.stack([
-        vertical.mass_apply3d(geom, vge1.jz, expand2d(ext.f2d_x / H1, nl)),
-        vertical.mass_apply3d(geom, vge1.jz, expand2d(ext.f2d_y / H1, nl))])
-    m0u = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.ux),
-                     vertical.mass_apply3d(geom, vge0.jz, st0.uy)])
-    wind = jnp.stack([
-        _wind_rhs(geom, forcing.tau_x, nl, nt, f3h.dtype),
-        _wind_rhs(geom, forcing.tau_y, nl, nt, f3h.dtype)])
-    rhs_u = m0u + dtau * (f3h + f2d_term + wind)
+        H1 = jnp.maximum(eta1 + vg.b, cfg.h_min)
+        f2d_term = jnp.stack([
+            vertical.mass_apply3d(geom, vge1.jz,
+                                  expand2d(ext.f2d_x / H1, nl)),
+            vertical.mass_apply3d(geom, vge1.jz,
+                                  expand2d(ext.f2d_y / H1, nl))])
+        m0u = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.ux),
+                         vertical.mass_apply3d(geom, vge0.jz, st0.uy)])
+        wind = jnp.stack([
+            _wind_rhs(geom, forcing.tau_x, nl, nt, f3h.dtype),
+            _wind_rhs(geom, forcing.tau_y, nl, nt, f3h.dtype)])
+        rhs_u = m0u + dtau * (f3h + f2d_term + wind)
 
-    A_u = vertical.assemble_vertical_operator(
-        geom, nl, vgee.jz, wrel, wface, kv, vgee.H, drag_coeff=drag)
-    if implicit:
-        # assemble (M - dt A) and solve both velocity components in one
-        # cell-layout sweep: the lane axis is the cell column axis, so the
-        # blocks go to the kernel as assembled — no SoA<->cell round-trip
-        sys = vertical.implicit_system(M1b, A_u, dtau)
-        u1 = kops.block_thomas(sys, rhs_u, backend=cfg.backend)
-    else:
-        f3v = jnp.stack([vertical.blocks_matvec(A_u, ux_e),
-                         vertical.blocks_matvec(A_u, uy_e)])
-        u1 = jnp.stack([
-            vertical.mass_solve3d(geom, vge1.jz, rhs_u[0] + dtau * f3v[0]),
-            vertical.mass_solve3d(geom, vge1.jz, rhs_u[1] + dtau * f3v[1])])
+        A_u = vertical.assemble_vertical_operator(
+            geom, nl, vgee.jz, wrel, wface, kv, vgee.H, drag_coeff=drag)
+        if implicit:
+            # assemble (M - dt A) and solve both velocity components in one
+            # cell-layout sweep: the lane axis is the cell column axis, so
+            # the blocks go to the kernel as assembled — no SoA<->cell
+            # round-trip
+            sys = vertical.implicit_system(M1b, A_u, dtau)
+            u1 = kops.block_thomas(sys, rhs_u, backend=cfg.backend)
+        else:
+            f3v = jnp.stack([vertical.blocks_matvec(A_u, ux_e),
+                             vertical.blocks_matvec(A_u, uy_e)])
+            u1 = jnp.stack([
+                vertical.mass_solve3d(geom, vge1.jz,
+                                      rhs_u[0] + dtau * f3v[0]),
+                vertical.mass_solve3d(geom, vge1.jz,
+                                      rhs_u[1] + dtau * f3v[1])])
 
     # --- component 5: tracers (T & S solved together) -------------------------
-    m0tr = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.T),
-                      vertical.mass_apply3d(geom, vge0.jz, st0.S)])
-    rhs_tr = m0tr + dtau * f3h_tr
-    A_tr = vertical.assemble_vertical_operator(
-        geom, nl, vgee.jz, wrel, wface, kap, vgee.H, drag_coeff=None)
-    if implicit:
-        sysT = vertical.implicit_system(M1b, A_tr, dtau)
-        tr1 = kops.block_thomas(sysT, rhs_tr, backend=cfg.backend)
-    else:
-        f3v_tr = jnp.stack([vertical.blocks_matvec(A_tr, T_e),
-                            vertical.blocks_matvec(A_tr, S_e)])
-        tr1 = jnp.stack([
-            vertical.mass_solve3d(geom, vge1.jz, rhs_tr[0] + dtau * f3v_tr[0]),
-            vertical.mass_solve3d(geom, vge1.jz, rhs_tr[1] + dtau * f3v_tr[1])])
+    with jax.named_scope("stage.tracer_update"):
+        m0tr = jnp.stack([vertical.mass_apply3d(geom, vge0.jz, st0.T),
+                          vertical.mass_apply3d(geom, vge0.jz, st0.S)])
+        rhs_tr = m0tr + dtau * f3h_tr
+        A_tr = vertical.assemble_vertical_operator(
+            geom, nl, vgee.jz, wrel, wface, kap, vgee.H, drag_coeff=None)
+        if implicit:
+            sysT = vertical.implicit_system(M1b, A_tr, dtau)
+            tr1 = kops.block_thomas(sysT, rhs_tr, backend=cfg.backend)
+        else:
+            f3v_tr = jnp.stack([vertical.blocks_matvec(A_tr, T_e),
+                                vertical.blocks_matvec(A_tr, S_e)])
+            tr1 = jnp.stack([
+                vertical.mass_solve3d(geom, vge1.jz,
+                                      rhs_tr[0] + dtau * f3v_tr[0]),
+                vertical.mass_solve3d(geom, vge1.jz,
+                                      rhs_tr[1] + dtau * f3v_tr[1])])
 
     if cfg.use_gls and not implicit:
         # explicit steps update turbulence last (paper Fig. 2a caption),
         # advancing from turb_base (t0) with end-of-step shear/buoyancy
-        rho1 = eos.rho_prime(tr1[1], tr1[0], _pressure_dbar(vg, vge1),
-                             cfg.eos_kind)
-        m2, n2 = turbulence.shear_and_buoyancy(u1[0], u1[1], rho1, dz)
-        turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
+        with jax.named_scope("stage.turbulence_final"):
+            rho1 = eos.rho_prime(tr1[1], tr1[0], _pressure_dbar(vg, vge1),
+                                 cfg.eos_kind)
+            m2, n2 = turbulence.shear_and_buoyancy(u1[0], u1[1], rho1, dz)
+            turb1 = turbulence.gls_step(turb_base, m2, n2, dz, dtau)
 
     return StageOut(ext=ext.state, ux=u1[0], uy=u1[1], T=tr1[0], S=tr1[1],
                     turb=turb1, r=r, w_tilde=w_t)
@@ -376,14 +395,17 @@ def step(geom: G.Geom2D, vg: VGrid, cfg: OceanConfig, st: OceanState,
     supplied by the distributed runtime (distributed/ocean.py)."""
     turb0 = turbulence.TurbState(st.turb_k, st.turb_eps, st.nu_t, st.kappa_t)
 
-    s1 = stage(geom, vg, cfg, st, st.ux, st.uy, st.T, st.S, st.ext.eta,
-               turb0, cfg.dt / 2, max(cfg.m_2d // 2, 1),
-               cfg.implicit_stage1, forcing,
-               exchange2d=exchange2d, exchange_field=exchange_field)
+    with jax.named_scope("imex.stage1"):
+        s1 = stage(geom, vg, cfg, st, st.ux, st.uy, st.T, st.S, st.ext.eta,
+                   turb0, cfg.dt / 2, max(cfg.m_2d // 2, 1),
+                   cfg.implicit_stage1, forcing,
+                   exchange2d=exchange2d, exchange_field=exchange_field)
 
-    s2 = stage(geom, vg, cfg, st, s1.ux, s1.uy, s1.T, s1.S, s1.ext.eta,
-               s1.turb, cfg.dt, cfg.m_2d, False, forcing, turb_base=turb0,
-               exchange2d=exchange2d, exchange_field=exchange_field)
+    with jax.named_scope("imex.stage2"):
+        s2 = stage(geom, vg, cfg, st, s1.ux, s1.uy, s1.T, s1.S, s1.ext.eta,
+                   s1.turb, cfg.dt, cfg.m_2d, False, forcing,
+                   turb_base=turb0,
+                   exchange2d=exchange2d, exchange_field=exchange_field)
 
     return OceanState(
         ext=s2.ext, ux=s2.ux, uy=s2.uy, T=s2.T, S=s2.S,

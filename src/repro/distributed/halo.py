@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import partition as part
+from ..obs import metrics as _metrics
 
 
 @jax.tree_util.register_dataclass
@@ -46,13 +47,21 @@ def tables_from_spec(spec: part.PartitionSpec2D,
 
 
 def exchange(x: jax.Array, t: HaloTables) -> jax.Array:
-    """Refresh halo slots of one field (..., n_loc). Inside shard_map."""
+    """Refresh halo slots of one field (..., n_loc). Inside shard_map.
+
+    The metrics counters increment at TRACE time (shapes are static), so
+    ``halo.ppermute`` / ``halo.bytes`` record per-rank collective count and
+    wire bytes per compiled program — the §3.3 latency-model inputs."""
     P = t.n_devices
-    for off, sidx, ridx in zip(t.offsets, t.send, t.recv):
-        buf = x[..., sidx]
-        perm = [(i, (i + off) % P) for i in range(P)]
-        rbuf = jax.lax.ppermute(buf, t.axes, perm)
-        x = x.at[..., ridx].set(rbuf)
+    reg = _metrics.default()
+    with jax.named_scope("halo.exchange"):
+        for off, sidx, ridx in zip(t.offsets, t.send, t.recv):
+            buf = x[..., sidx]
+            reg.counter("halo.ppermute").inc()
+            reg.counter("halo.bytes").inc(buf.size * buf.dtype.itemsize)
+            perm = [(i, (i + off) % P) for i in range(P)]
+            rbuf = jax.lax.ppermute(buf, t.axes, perm)
+            x = x.at[..., ridx].set(rbuf)
     return x
 
 

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from ..core import geometry, mesh2d, stepper
 from ..core.dg2d import State2D
 from ..core.extrusion import VGrid
+from ..obs import metrics as _metrics
 from . import halo, partition
 
 
@@ -58,6 +59,15 @@ class DistributedOcean:
             partition.scatter_field(self.spec, np.asarray(b_nodal)), dtype)
         self.tables = halo.tables_from_spec(self.spec, self.axes)
         self.pspec = PartitionSpec(self.axes)
+
+        # static partition facts -> metrics (per-rank halo sizing context
+        # for the traced halo.bytes / halo.ppermute counters)
+        reg = _metrics.default()
+        reg.gauge("distributed.n_parts").set(n_parts)
+        reg.gauge("distributed.halo_depth").set(halo_depth)
+        reg.gauge("distributed.nt_local").set(self.spec.n_loc)
+        reg.gauge("distributed.halo_slots").set(
+            sum(int(s.shape[-1]) for s in self.tables.send))
 
     # -- state scatter/gather -------------------------------------------------
     def scatter_state(self, st: stepper.OceanState) -> stepper.OceanState:
@@ -107,8 +117,9 @@ class DistributedOcean:
                 return State2D(eta, qx, qy)
 
             exf = lambda f: halo.exchange(f, tables)
-            st1 = stepper.step(geom, vg, cfg, st, forcing,
-                               exchange2d=ex2d, exchange_field=exf)
+            with jax.named_scope("distributed.local_step"):
+                st1 = stepper.step(geom, vg, cfg, st, forcing,
+                                   exchange2d=ex2d, exchange_field=exf)
             return jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], st1)
 
         shmap = jax.shard_map(
@@ -141,8 +152,9 @@ class DistributedOcean:
                 return State2D(eta, qx, qy)
 
             exf = lambda f: halo.exchange(f, tables)
-            st1 = stepper.step(geom, vg, cfg, st, forcing,
-                               exchange2d=ex2d, exchange_field=exf)
+            with jax.named_scope("distributed.local_step"):
+                st1 = stepper.step(geom, vg, cfg, st, forcing,
+                                   exchange2d=ex2d, exchange_field=exf)
             return jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], st1)
 
         return jax.shard_map(

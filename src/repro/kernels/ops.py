@@ -25,8 +25,22 @@ from . import ref as _ref
 from . import tridiag as _tridiag
 from . import wkv6 as _wkv6
 from .dispatch import Backend
+from ..obs import metrics as _metrics
 
 CELL = cell_transpose.CELL
+
+
+def _dispatch_scope(op: str, bk: Backend):
+    """Count the kernel dispatch and tag it in the HLO/profile.
+
+    The counter increments when this call site is TRACED (once per compiled
+    program), so ``kernel_dispatch`` counts launches per program — the
+    quantity the paper's §3.3 launch-latency model multiplies by per-launch
+    overhead.  The named scope makes the kernel findable in profiles and in
+    the roofline HLO parse."""
+    _metrics.default().counter("kernel_dispatch", op=op,
+                               backend=bk.value).inc()
+    return jax.named_scope(f"kops.{op}.{bk.value}")
 
 
 def default_backend() -> str:
@@ -40,49 +54,56 @@ def default_backend() -> str:
 # ---------------------------------------------------------------------------
 def tridiag(dl, d, du, b, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.tridiag(dl, d, du, b)
-    return _tridiag.tridiag_cell(dl, d, du, b,
-                                 interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("tridiag", bk):
+        if bk is Backend.REF:
+            return _ref.tridiag(dl, d, du, b)
+        return _tridiag.tridiag_cell(dl, d, du, b,
+                                     interpret=dispatch.interpret_flag(bk))
 
 
 def solve_r_cell(F, area, r_surf, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.solve_r_cell(F, area, r_surf)
-    return matrix_free.solve_r_cell(F, area, r_surf,
-                                    interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("solve_r_cell", bk):
+        if bk is Backend.REF:
+            return _ref.solve_r_cell(F, area, r_surf)
+        return matrix_free.solve_r_cell(
+            F, area, r_surf, interpret=dispatch.interpret_flag(bk))
 
 
 def solve_w_cell(F, area, w_floor, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.solve_w_cell(F, area, w_floor)
-    return matrix_free.solve_w_cell(F, area, w_floor,
-                                    interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("solve_w_cell", bk):
+        if bk is Backend.REF:
+            return _ref.solve_w_cell(F, area, w_floor)
+        return matrix_free.solve_w_cell(
+            F, area, w_floor, interpret=dispatch.interpret_flag(bk))
 
 
 def block_thomas_cell(lo, dg, up, b, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.block_thomas_cell(lo, dg, up, b)
-    return column_solve.block_thomas_cell(
-        lo, dg, up, b, interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("block_thomas_cell", bk):
+        if bk is Backend.REF:
+            return _ref.block_thomas_cell(lo, dg, up, b)
+        return column_solve.block_thomas_cell(
+            lo, dg, up, b, interpret=dispatch.interpret_flag(bk))
 
 
 def soa_to_cell(x, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.soa_to_cell(x)
-    return cell_transpose.soa_to_cell(x, interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("soa_to_cell", bk):
+        if bk is Backend.REF:
+            return _ref.soa_to_cell(x)
+        return cell_transpose.soa_to_cell(
+            x, interpret=dispatch.interpret_flag(bk))
 
 
 def cell_to_soa(x, nt, backend: dispatch.BackendLike = None):
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return _ref.cell_to_soa(x, nt)
-    return cell_transpose.cell_to_soa(x, nt=nt,
-                                      interpret=dispatch.interpret_flag(bk))
+    with _dispatch_scope("cell_to_soa", bk):
+        if bk is Backend.REF:
+            return _ref.cell_to_soa(x, nt)
+        return cell_transpose.cell_to_soa(
+            x, nt=nt, interpret=dispatch.interpret_flag(bk))
 
 
 # ---------------------------------------------------------------------------
@@ -123,10 +144,11 @@ def solve_r(geom, F, r_surf, backend: dispatch.BackendLike = None):
     F: (..., nl, 6, nt); r_surf: (..., 3, nt) -> (..., nl, 6, nt)."""
     from ..core import vertical
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return vertical.solve_r(geom, F, r_surf)
-    return _solve_cells(matrix_free.solve_r_cell, geom, F, r_surf,
-                        dispatch.interpret_flag(bk))
+    with _dispatch_scope("solve_r", bk):
+        if bk is Backend.REF:
+            return vertical.solve_r(geom, F, r_surf)
+        return _solve_cells(matrix_free.solve_r_cell, geom, F, r_surf,
+                            dispatch.interpret_flag(bk))
 
 
 def solve_w(geom, F, w_floor=None, backend: dispatch.BackendLike = None):
@@ -135,12 +157,13 @@ def solve_w(geom, F, w_floor=None, backend: dispatch.BackendLike = None):
     F: (..., nl, 6, nt); w_floor: (..., 3, nt) or None (impermeable floor)."""
     from ..core import vertical
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return vertical.solve_w(geom, F, w_floor)
-    if w_floor is None:
-        w_floor = jnp.zeros((3, F.shape[-1]), F.dtype)
-    return _solve_cells(matrix_free.solve_w_cell, geom, F, w_floor,
-                        dispatch.interpret_flag(bk))
+    with _dispatch_scope("solve_w", bk):
+        if bk is Backend.REF:
+            return vertical.solve_w(geom, F, w_floor)
+        if w_floor is None:
+            w_floor = jnp.zeros((3, F.shape[-1]), F.dtype)
+        return _solve_cells(matrix_free.solve_w_cell, geom, F, w_floor,
+                            dispatch.interpret_flag(bk))
 
 
 def block_thomas(blocks, rhs, backend: dispatch.BackendLike = None):
@@ -152,13 +175,14 @@ def block_thomas(blocks, rhs, backend: dispatch.BackendLike = None):
     layout work is one moveaxis of the k RHS components in and out."""
     from ..core import vertical
     bk = dispatch.resolve(backend)
-    if bk is Backend.REF:
-        return vertical.block_thomas_solve(blocks, rhs)
-    b = jnp.moveaxis(rhs, 0, 2)                      # (nl, 6, k, nt)
-    x = column_solve.block_thomas_cell(
-        blocks.lo, blocks.dg, blocks.up, b,
-        interpret=dispatch.interpret_flag(bk))
-    return jnp.moveaxis(x, 2, 0)
+    with _dispatch_scope("block_thomas", bk):
+        if bk is Backend.REF:
+            return vertical.block_thomas_solve(blocks, rhs)
+        b = jnp.moveaxis(rhs, 0, 2)                  # (nl, 6, k, nt)
+        x = column_solve.block_thomas_cell(
+            blocks.lo, blocks.dg, blocks.up, b,
+            interpret=dispatch.interpret_flag(bk))
+        return jnp.moveaxis(x, 2, 0)
 
 
 def lateral_flux_term(geom, f, fext, speed,
@@ -172,20 +196,21 @@ def lateral_flux_term(geom, f, fext, speed,
     weights are tiled across them); returns (k, nl, 6, nt)."""
     from ..core import geometry as G
     bk = dispatch.resolve(backend)
-    k, nl, _, nt = f.shape
-    fc = _fold_cols(f, k, nt)                                  # (nl*6, k*nt)
-    fe = jnp.moveaxis(fext.reshape(k, nl, 12, nt), 0, 2).reshape(nl * 12,
-                                                                 k * nt)
-    sp = jnp.tile(speed.reshape(nl * 12, nt), (1, k))
-    wq = (geom.edge_len[:, None, :]
-          * jnp.asarray(G.W_GAUSS)[:, None]).reshape(6, nt)
-    wq = jnp.tile(wq, (1, k))
-    if bk is Backend.REF:
-        out = _ref.lateral_flux_cell(fc, fe, sp, wq)
-    else:
-        out = horizontal_flux.lateral_flux_cell(
-            fc, fe, sp, wq, interpret=dispatch.interpret_flag(bk))
-    return _unfold_cols(out, k, nl, 6, nt)
+    with _dispatch_scope("lateral_flux", bk):
+        k, nl, _, nt = f.shape
+        fc = _fold_cols(f, k, nt)                              # (nl*6, k*nt)
+        fe = jnp.moveaxis(fext.reshape(k, nl, 12, nt), 0, 2).reshape(
+            nl * 12, k * nt)
+        sp = jnp.tile(speed.reshape(nl * 12, nt), (1, k))
+        wq = (geom.edge_len[:, None, :]
+              * jnp.asarray(G.W_GAUSS)[:, None]).reshape(6, nt)
+        wq = jnp.tile(wq, (1, k))
+        if bk is Backend.REF:
+            out = _ref.lateral_flux_cell(fc, fe, sp, wq)
+        else:
+            out = horizontal_flux.lateral_flux_cell(
+                fc, fe, sp, wq, interpret=dispatch.interpret_flag(bk))
+        return _unfold_cols(out, k, nl, 6, nt)
 
 
 # ---------------------------------------------------------------------------

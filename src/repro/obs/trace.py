@@ -1,0 +1,68 @@
+"""Staged tracing helpers: named scopes for XLA/Pallas profiles + an opt-in
+``jax.profiler`` trace session that lands in a run directory.
+
+``annotate(name)`` is safe both inside jit-traced code (adds a
+``jax.named_scope`` so the op shows up under that name in compiled HLO and
+profiler timelines) and on the host (adds a ``TraceAnnotation`` span to any
+active profiler trace).  The library hot path uses bare ``jax.named_scope``
+directly — zero runtime cost, pure trace-time metadata.
+
+``trace_session`` wraps ``jax.profiler.start_trace/stop_trace``; it is
+opt-in: enabled explicitly, or via the ``REPRO_TRACE=1`` environment
+variable (run directory override: ``REPRO_RUN_DIR``).  Profiles land in
+``<run_dir>/plugins/profile/...`` — point TensorBoard or xprof at the run
+directory.
+"""
+from __future__ import annotations
+
+import contextlib
+import datetime
+import os
+from typing import Iterator, Optional
+
+import jax
+
+ENV_TRACE = "REPRO_TRACE"
+ENV_RUN_DIR = "REPRO_RUN_DIR"
+DEFAULT_RUNS_ROOT = "runs"
+
+
+def trace_enabled() -> bool:
+    return os.environ.get(ENV_TRACE, "0") not in ("", "0", "false", "False")
+
+
+def default_run_dir(prefix: str = "trace") -> str:
+    env = os.environ.get(ENV_RUN_DIR)
+    if env:
+        return env
+    stamp = datetime.datetime.now().strftime("%Y%m%d-%H%M%S")
+    return os.path.join(DEFAULT_RUNS_ROOT, f"{prefix}-{stamp}-{os.getpid()}")
+
+
+@contextlib.contextmanager
+def annotate(name: str) -> Iterator[None]:
+    """named_scope (trace-time HLO metadata) + TraceAnnotation (host span)."""
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield
+
+
+@contextlib.contextmanager
+def trace_session(run_dir: Optional[str] = None,
+                  enabled: Optional[bool] = None) -> Iterator[Optional[str]]:
+    """Opt-in profiler trace over the enclosed block.
+
+    Yields the run directory when tracing is active, else None.  ``enabled``
+    defaults to the REPRO_TRACE environment toggle, so harnesses can wrap
+    their hot section unconditionally and let the environment decide."""
+    if enabled is None:
+        enabled = trace_enabled()
+    if not enabled:
+        yield None
+        return
+    run_dir = run_dir or default_run_dir()
+    os.makedirs(run_dir, exist_ok=True)
+    jax.profiler.start_trace(run_dir)
+    try:
+        yield run_dir
+    finally:
+        jax.profiler.stop_trace()

@@ -35,6 +35,9 @@ PEAK_FLOPS_BF16 = 197e12
 PEAK_FLOPS_F32 = 98.5e12
 HBM_BW = 819e9
 ICI_BW = 50e9
+# host-memory bandwidth model for the CPU CI containers (DDR4/DDR5 class,
+# single socket): benches on CPU report achieved-vs-bound against this
+CPU_MEM_BW = 50e9
 # per-collective launch/sync latency (paper §3.3: ~7.5 us per sync+comm+launch
 # on A100+IB; TPU ICI hops are faster — 2 us models dispatch+first-hop)
 COLL_LATENCY = 2e-6
@@ -245,6 +248,18 @@ def _trip_count(line: str, comps: Dict[str, _Computation]) -> int:
         if consts:
             return max(consts)
     return 1
+
+
+def peak_bandwidth(platform: Optional[str] = None) -> float:
+    """Memory-bandwidth bound (bytes/s) for achieved-vs-bound reporting.
+
+    platform defaults to the ambient JAX backend.  TPU -> HBM, anything
+    else -> the CPU host-memory model; the quotient achieved/bound is the
+    bench artifact's roofline fraction."""
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    return HBM_BW if platform == "tpu" else CPU_MEM_BW
 
 
 def analyze_hlo_text(text: str) -> HloStats:

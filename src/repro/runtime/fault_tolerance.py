@@ -14,6 +14,12 @@ Designed for 1000+ node fleets where *something is always failing*:
     (JAX's SPMD model gives no in-band per-host mitigation, so detection +
     external replacement + elastic restore IS the mitigation path; the
     elastic checkpoint format restores onto any device count).
+
+Observability (obs/): step wall time, the straggler EMA, and retry /
+straggler counters stream into the default metrics registry; a step whose
+metrics carry a physics ``diagnostics`` entry (the obs.diagnostics pytree or
+its dict form) with the non-finite flag set is treated exactly like a NaN
+loss — restore-and-retry — with the offending field/cell in the error.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax
 import numpy as np
 
 from ..checkpoint.checkpoint import Checkpointer
+from ..obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -36,6 +43,35 @@ class RunnerConfig:
     max_retries: int = 3
     straggler_factor: float = 2.0
     nan_is_failure: bool = True
+    emit_metrics: bool = True      # stream runner stats to obs.metrics
+
+
+def _diag_nonfinite(diag: Any) -> Optional[str]:
+    """Non-finite reason string from a diagnostics entry, or None.
+
+    Accepts the obs.diagnostics.Diagnostics pytree or its to_dict() form;
+    anything without a ``nonfinite`` signal is ignored."""
+    if diag is None:
+        return None
+    if isinstance(diag, dict):
+        flag, field, cell = (diag.get("nonfinite"),
+                             diag.get("bad_field_name", diag.get("bad_field")),
+                             diag.get("bad_cell"))
+    else:
+        flag = getattr(diag, "nonfinite", None)
+        field = getattr(diag, "bad_field", None)
+        cell = getattr(diag, "bad_cell", None)
+        if flag is not None:
+            try:
+                from ..obs.diagnostics import FIELDS
+                fi = int(field)
+                field = FIELDS[fi] if 0 <= fi < len(FIELDS) else fi
+                cell = int(cell)
+            except Exception:
+                pass
+    if flag is None or not bool(flag):
+        return None
+    return f"non-finite state (field={field}, cell={cell})"
 
 
 class TrainRunner:
@@ -82,9 +118,15 @@ class TrainRunner:
                 if self.cfg.nan_is_failure and loss is not None and \
                         not np.isfinite(float(loss)):
                     raise FloatingPointError(f"non-finite loss at {step}")
+                if self.cfg.nan_is_failure and isinstance(metrics, dict):
+                    reason = _diag_nonfinite(metrics.get("diagnostics"))
+                    if reason is not None:
+                        raise FloatingPointError(f"{reason} at {step}")
             except Exception:
                 retries += 1
                 self.stats["retries"] += 1
+                if self.cfg.emit_metrics:
+                    obs_metrics.default().counter("runner.retries").inc()
                 if retries > self.cfg.max_retries:
                     self.ckpt.wait()
                     raise
@@ -101,8 +143,15 @@ class TrainRunner:
             ema = self.stats["step_time_ema"]
             if ema is not None and dt > self.cfg.straggler_factor * ema:
                 self.stats["stragglers"] += 1
+                if self.cfg.emit_metrics:
+                    obs_metrics.default().counter("runner.stragglers").inc()
             self.stats["step_time_ema"] = dt if ema is None else \
                 0.9 * ema + 0.1 * dt
+            if self.cfg.emit_metrics:
+                reg = obs_metrics.default()
+                reg.histogram("runner.step_time_s").observe(dt)
+                reg.gauge("runner.step_time_ema_s").set(
+                    self.stats["step_time_ema"])
             step += 1
             self.stats["steps"] += 1
             if step % self.cfg.checkpoint_every == 0:
