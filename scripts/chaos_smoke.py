@@ -1,0 +1,139 @@
+"""CI chaos smoke: a seeded fault matrix on a tiny mesh, asserting recovery.
+
+For each recoverable fault class the same standing-wave campaign runs under
+a deterministic ``FaultPlan`` and must (a) complete all steps and (b) end in
+a final state that is BITWISE equal (f64) to the fault-free baseline:
+
+  * nan-poison        NaN injected into a state field mid-run; the obs
+                      diagnostics localise it, the runner restores the last
+                      checkpoint and re-runs
+  * corrupt-ckpt      the newest checkpoint is truncated on disk before a
+                      NaN failure; restore must fall back to the older
+                      intact step
+  * preemption        SIGTERM mid-run -> blocking checkpoint + early return;
+                      a second leg resumes and finishes
+  * save-thread       the async checkpoint worker raises; the error surfaces
+                      at the next save and the runner retries synchronously
+
+Exit codes: 0 ok, 1 failure.
+Usage: PYTHONPATH=src python scripts/chaos_smoke.py [--steps N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np                                              # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import sim_campaign                           # noqa: E402
+from repro.obs import metrics as obs_metrics                    # noqa: E402
+from repro.runtime import chaos                                 # noqa: E402
+from repro.runtime.fault_tolerance import RunnerConfig          # noqa: E402
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(state)]
+
+
+def _bitwise_equal(a, b) -> bool:
+    la, lb = _leaves(a), _leaves(b)
+    return len(la) == len(lb) and all(
+        x.shape == y.shape and np.array_equal(x, y, equal_nan=True)
+        for x, y in zip(la, lb))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    n = args.steps
+
+    case = sim_campaign.build_case(nx=4, ny=3, nl=4)
+    root = tempfile.mkdtemp(prefix="chaos_smoke_")
+
+    def rcfg(name):
+        return RunnerConfig(checkpoint_dir=os.path.join(root, name),
+                            checkpoint_every=2, max_retries=3,
+                            backoff_base_s=0.01, emit_metrics=False)
+
+    def leg(name, plan, resume=False):
+        return sim_campaign.run_campaign(
+            case, n, rcfg(name), policy=sim_campaign.default_policy(),
+            plan=plan, resume=resume)
+
+    failures = []
+
+    def check(name, ok, detail=""):
+        status = "ok" if ok else "FAIL"
+        print(f"  [{status}] {name}" + (f": {detail}" if detail else ""))
+        if not ok:
+            failures.append(name)
+
+    try:
+        obs_metrics.reset()
+        baseline, _ = leg("baseline", plan=None)
+        print(f"baseline: {n} steps, t={float(baseline.time):.1f}s")
+
+        # --- 1. NaN poisoning -> restore + deterministic re-run -----------
+        plan = chaos.FaultPlan([chaos.Fault("sim.state", "poison_nan",
+                                            step=n - 1, field="T")],
+                               seed=args.seed)
+        st, runner = leg("nan", plan)
+        check("nan-poison fired", len(plan.log) == 1)
+        check("nan-poison recovered", runner.stats["retries"] == 1
+              and _bitwise_equal(st, baseline),
+              f"retries={runner.stats['retries']}")
+
+        # --- 2. corrupt checkpoint -> fallback to older intact step -------
+        obs_metrics.reset()
+        plan = chaos.FaultPlan(
+            [chaos.Fault("checkpoint.saved", "truncate", step=4),
+             chaos.Fault("sim.state", "poison_nan", step=n - 1, field="ux")],
+            seed=args.seed)
+        st, runner = leg("corrupt", plan)
+        skipped = obs_metrics.default().snapshot()["counter"].get(
+            "checkpoint.corrupt_skipped", 0)
+        check("corrupt-ckpt skipped corrupt step", skipped >= 1)
+        check("corrupt-ckpt recovered", _bitwise_equal(st, baseline),
+              f"retries={runner.stats['retries']}")
+
+        # --- 3. preemption -> blocking save, resume leg finishes ----------
+        plan = chaos.FaultPlan([chaos.Fault("runner.step", "preempt",
+                                            step=n - 2)], seed=args.seed)
+        st1, runner1 = leg("preempt", plan)
+        check("preemption checkpointed", runner1.stats["preempted"]
+              and runner1.ckpt.latest_step() is not None)
+        st, runner2 = leg("preempt", plan=None, resume=True)
+        check("preemption resumed bitwise", _bitwise_equal(st, baseline),
+              f"resumed from step {runner1.ckpt.latest_step()}")
+
+        # --- 4. save-thread failure -> surfaced + retried, run completes --
+        plan = chaos.FaultPlan([chaos.Fault("checkpoint.write", "io_error",
+                                            step=2)], seed=args.seed)
+        st, runner = leg("savefail", plan)
+        check("save-failure surfaced", runner.stats["ckpt_failures"] >= 1,
+              f"ckpt_failures={runner.stats['ckpt_failures']}")
+        check("save-failure run completed", _bitwise_equal(st, baseline))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    if failures:
+        print(f"FAIL chaos smoke: {failures}", file=sys.stderr)
+        return 1
+    print(f"OK chaos smoke: 4 fault classes recovered, final state bitwise "
+          f"== baseline over {n} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

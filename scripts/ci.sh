@@ -3,10 +3,14 @@
 # missing-optional-dependency regressions like the hypothesis one) and PASS
 # on a bare jax+pytest environment, within a time budget.
 #
-# Usage: scripts/ci.sh [--obs-smoke] [extra pytest args]
+# Usage: scripts/ci.sh [--obs-smoke|--chaos-smoke] [extra pytest args]
 #   --obs-smoke   run ONLY the observability smoke: a 3-step instrumented
 #                 simulation that must emit a schema-valid metrics JSONL
 #                 and pass the physics monitors (exit != 0 on violation)
+#   --chaos-smoke run ONLY the chaos smoke: a seeded fault matrix (NaN
+#                 poisoning, corrupt checkpoint, preemption, save-thread
+#                 failure) on a tiny mesh; each class must recover with a
+#                 final state bitwise equal to the fault-free run
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +19,10 @@ BUDGET="${CI_TIME_BUDGET_S:-2400}"
 
 if [[ "${1:-}" == "--obs-smoke" ]]; then
     exec timeout 600 python scripts/obs_smoke.py
+fi
+
+if [[ "${1:-}" == "--chaos-smoke" ]]; then
+    exec timeout 600 python scripts/chaos_smoke.py
 fi
 
 # collection gate: any import error fails fast and loudly

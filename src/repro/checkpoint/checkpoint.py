@@ -1,15 +1,32 @@
-"""Checkpointing: async, atomic, elastic.
+"""Checkpointing: async, atomic, elastic — and verified.
 
-Format: one directory per step containing one .npy per pytree leaf (path-
-encoded filenames) + meta.json (tree structure, step, mesh shape).  Writes
-go to a temp dir then os.rename (atomic on POSIX); a `latest` file points at
-the newest complete step; keep_last prunes old steps.
+Format (v2): one directory per step containing one .npy per pytree leaf
+(path-encoded filenames) + meta.json holding the tree keys AND a per-leaf
+manifest (crc32 checksum, shape, dtype).  Writes go to a temp dir then
+os.rename (atomic on POSIX); a `latest` file points at the newest complete
+step; keep_last prunes old steps.
+
+Verification: ``restore`` checks every leaf it loads against the manifest
+(checksum + shape + dtype) and, when no explicit step was requested, falls
+back to the newest *intact* step — a truncated .npy, a missing leaf, or a
+stale/dangling ``latest`` pointer costs one checkpoint interval, not the
+run.  v1 checkpoints (no manifest) still restore, unverified.
+
+Failure propagation: the async save worker records any exception and the
+next ``wait()``/``save()`` re-raises it as ``CheckpointError`` — a failed
+background save is loud, never a run that silently believes it is
+checkpointed.
 
 Elastic re-sharding: leaves are stored as GLOBAL arrays, so restoring onto a
 different mesh/device-count is just device_put with the new shardings —
 rescaling from 256 to 512 chips (or to 8 test devices) needs no resharding
 tool.  Async: serialisation happens on a background thread after device_get;
 `wait()` joins before the next save (double-buffered checkpointing).
+
+Chaos sites (``runtime/chaos.py``): ``checkpoint.write`` fires inside the
+worker before files land (injected IOError = disk failure mid-save);
+``checkpoint.saved`` fires after the rename (injected corruption hits a
+fully-landed checkpoint, exactly what a later restore must survive).
 """
 from __future__ import annotations
 
@@ -17,10 +34,21 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+FORMAT = 2
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint save failed (possibly on the async worker thread)."""
+
+
+class CheckpointCorruption(CheckpointError):
+    """A checkpoint step failed restore-time verification."""
 
 
 def _flatten(tree):
@@ -33,16 +61,32 @@ def _flatten(tree):
     return out, treedef
 
 
+def _leaf_file(key: str) -> str:
+    return key.replace("/", "__") + ".npy"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _step_name(step: int) -> str:
+    return f"step_{step:09d}"
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, blocking: bool = False):
-        """Snapshot `tree` at `step`; serialisation is async by default."""
+        """Snapshot `tree` at `step`; serialisation is async by default.
+
+        Raises ``CheckpointError`` here if the PREVIOUS async save failed —
+        the error from the worker thread surfaces at the next save/wait."""
         self.wait()
         flat, _ = _flatten(tree)
         # device_get on the caller thread (cheap on CPU; on TPU this is the
@@ -51,19 +95,31 @@ class Checkpointer:
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
 
         def work():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step:09d}")
-            shutil.rmtree(tmp, ignore_errors=True)
-            os.makedirs(tmp)
-            for k, v in host.items():
-                np.save(os.path.join(tmp, k.replace("/", "__") + ".npy"), v)
-            with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump({"step": step, "keys": sorted(host.keys())}, f)
-            shutil.rmtree(final, ignore_errors=True)
-            os.rename(tmp, final)
-            with open(os.path.join(self.dir, "latest"), "w") as f:
-                f.write(os.path.basename(final))
-            self._prune()
+            try:
+                from ..runtime import chaos
+                chaos.site("checkpoint.write", step=step, directory=self.dir)
+                tmp = os.path.join(self.dir, f".tmp_step_{step}")
+                final = os.path.join(self.dir, _step_name(step))
+                shutil.rmtree(tmp, ignore_errors=True)
+                os.makedirs(tmp)
+                manifest: Dict[str, dict] = {}
+                for k, v in host.items():
+                    np.save(os.path.join(tmp, _leaf_file(k)), v)
+                    manifest[k] = dict(crc32=_crc(v), shape=list(v.shape),
+                                       dtype=str(v.dtype))
+                with open(os.path.join(tmp, "meta.json"), "w") as f:
+                    json.dump({"step": step, "format": FORMAT,
+                               "keys": sorted(host.keys()),
+                               "leaves": manifest}, f)
+                shutil.rmtree(final, ignore_errors=True)
+                os.rename(tmp, final)
+                with open(os.path.join(self.dir, "latest"), "w") as f:
+                    f.write(os.path.basename(final))
+                self._prune()
+                chaos.site("checkpoint.saved", step=step, directory=self.dir,
+                           path=final)
+            except BaseException as e:           # surfaces at next wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
@@ -71,9 +127,14 @@ class Checkpointer:
             self.wait()
 
     def wait(self):
+        """Join any in-flight save; re-raise its failure as CheckpointError."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                f"async checkpoint save failed: {err!r}") from err
 
     def _prune(self):
         steps = sorted(d for d in os.listdir(self.dir)
@@ -81,38 +142,196 @@ class Checkpointer:
         for d in steps[:-self.keep_last]:
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
+    # ---------------------------------------------------------- verification
+    def steps(self) -> List[int]:
+        """All step numbers with a step directory on disk (ascending)."""
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def manifest(self, step: int) -> Optional[dict]:
+        p = os.path.join(self.dir, _step_name(step), "meta.json")
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    def verify(self, step: int) -> List[str]:
+        """Problems with the on-disk checkpoint at ``step`` ([] = intact).
+
+        Checks meta.json, leaf presence, checksum, shape and dtype against
+        the manifest.  v1 checkpoints (no manifest) only get existence
+        checks."""
+        d = os.path.join(self.dir, _step_name(step))
+        meta = self.manifest(step)
+        if meta is None:
+            return [f"{_step_name(step)}: missing/unreadable meta.json"]
+        problems = []
+        leaves = meta.get("leaves", {})
+        for k in meta.get("keys", []):
+            path = os.path.join(d, _leaf_file(k))
+            if not os.path.exists(path):
+                problems.append(f"{k}: leaf file missing")
+                continue
+            try:
+                arr = np.load(path)
+            except Exception as e:
+                problems.append(f"{k}: unreadable ({e})")
+                continue
+            info = leaves.get(k)
+            if info is None:
+                continue                       # v1: nothing to check against
+            if list(arr.shape) != list(info["shape"]):
+                problems.append(f"{k}: shape {list(arr.shape)} != manifest "
+                                f"{info['shape']}")
+            if str(arr.dtype) != info["dtype"]:
+                problems.append(f"{k}: dtype {arr.dtype} != manifest "
+                                f"{info['dtype']}")
+            if _crc(arr) != info["crc32"]:
+                problems.append(f"{k}: checksum mismatch")
+        return problems
+
+    def intact_steps(self) -> List[int]:
+        """Steps that pass verification, newest first."""
+        return [s for s in reversed(self.steps()) if not self.verify(s)]
+
     # --------------------------------------------------------------- restore
     def latest_step(self) -> Optional[int]:
+        """Newest step per the ``latest`` pointer — falling back to a
+        directory scan when the pointer is missing, stale or dangling."""
+        candidates = self.steps()
         p = os.path.join(self.dir, "latest")
-        if not os.path.exists(p):
-            return None
-        with open(p) as f:
-            name = f.read().strip()
-        if not os.path.exists(os.path.join(self.dir, name, "meta.json")):
-            return None
-        return int(name.split("_")[1])
+        if os.path.exists(p):
+            with open(p) as f:
+                name = f.read().strip()
+            if os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                try:
+                    pointed = int(name.split("_")[1])
+                    # a stale pointer (older than what's on disk) is repaired
+                    # by the scan; a fresh one wins
+                    if not candidates or pointed >= candidates[-1]:
+                        return pointed
+                except ValueError:
+                    pass
+        while candidates:
+            s = candidates.pop()
+            if os.path.exists(os.path.join(self.dir, _step_name(s),
+                                           "meta.json")):
+                return s
+        return None
 
-    def restore(self, template: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Any:
-        """Restore into the structure of `template`.
-
-        shardings: optional matching tree of jax.sharding.Sharding — arrays
-        are device_put with them (elastic rescale path)."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        flat, treedef = _flatten(template)
-        sh_flat = None
-        if shardings is not None:
-            sh_flat, _ = _flatten(shardings)
+    def _load_step(self, step: int, flat: dict, sh_flat: Optional[dict]):
+        """Load + verify one step into the template's key set."""
+        d = os.path.join(self.dir, _step_name(step))
+        meta = self.manifest(step)
+        if meta is None:
+            raise CheckpointCorruption(
+                f"{_step_name(step)}: missing/unreadable meta.json")
+        leaves = meta.get("leaves", {})
         out = {}
         for k in flat:
-            arr = np.load(os.path.join(d, k.replace("/", "__") + ".npy"))
+            path = os.path.join(d, _leaf_file(k))
+            try:
+                arr = np.load(path)
+            except FileNotFoundError:
+                raise CheckpointCorruption(
+                    f"{_step_name(step)}: leaf {k!r} missing")
+            except Exception as e:
+                raise CheckpointCorruption(
+                    f"{_step_name(step)}: leaf {k!r} unreadable: {e}")
+            info = leaves.get(k)
+            if info is not None:
+                if list(arr.shape) != list(info["shape"]):
+                    raise CheckpointCorruption(
+                        f"{_step_name(step)}: leaf {k!r} shape "
+                        f"{list(arr.shape)} != manifest {info['shape']}")
+                if str(arr.dtype) != info["dtype"]:
+                    raise CheckpointCorruption(
+                        f"{_step_name(step)}: leaf {k!r} dtype {arr.dtype} "
+                        f"!= manifest {info['dtype']}")
+                if _crc(arr) != info["crc32"]:
+                    raise CheckpointCorruption(
+                        f"{_step_name(step)}: leaf {k!r} checksum mismatch")
             if sh_flat is not None and k in sh_flat:
                 out[k] = jax.device_put(arr, sh_flat[k])
             else:
                 out[k] = jax.numpy.asarray(arr)
-        leaves = [out[k] for k in flat]
-        return jax.tree_util.tree_unflatten(treedef, leaves)
+        return out
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `template`, verified.
+
+        ``step=None`` restores the newest INTACT step: corrupt candidates
+        are skipped (with a warning via the default metrics registry) until
+        one verifies.  An explicitly requested ``step`` raises
+        ``CheckpointCorruption`` instead of silently substituting history.
+
+        shardings: optional matching tree of jax.sharding.Sharding — arrays
+        are device_put with them (elastic rescale path)."""
+        flat, treedef = _flatten(template)
+        sh_flat = None
+        if shardings is not None:
+            sh_flat, _ = _flatten(shardings)
+
+        if step is not None:
+            candidates = [step]
+            fallback = False
+        else:
+            latest = self.latest_step()
+            if latest is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            candidates = sorted((s for s in self.steps() if s <= latest),
+                                reverse=True)
+            fallback = True
+
+        last_err: Optional[CheckpointCorruption] = None
+        for s in candidates:
+            try:
+                out = self._load_step(s, flat, sh_flat)
+            except CheckpointCorruption as e:
+                last_err = e
+                if fallback:
+                    from ..obs import metrics as obs_metrics
+                    obs_metrics.default().counter(
+                        "checkpoint.corrupt_skipped").inc()
+                    continue
+                raise
+            leaves = [out[k] for k in flat]
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+        raise last_err if last_err is not None else FileNotFoundError(
+            f"no checkpoint in {self.dir}")
+
+    def restore_latest(self, template: Any, shardings: Any = None
+                       ) -> Tuple[Any, Optional[int]]:
+        """(state, step) from the newest intact checkpoint, or (None, None)
+        when nothing on disk is restorable — the runner's cold-restart
+        decision point."""
+        try:
+            latest = self.latest_step()
+            if latest is None:
+                return None, None
+            flat, treedef = _flatten(template)
+            sh_flat = None
+            if shardings is not None:
+                sh_flat, _ = _flatten(shardings)
+            for s in sorted((x for x in self.steps() if x <= latest),
+                            reverse=True):
+                try:
+                    out = self._load_step(s, flat, sh_flat)
+                except CheckpointCorruption:
+                    from ..obs import metrics as obs_metrics
+                    obs_metrics.default().counter(
+                        "checkpoint.corrupt_skipped").inc()
+                    continue
+                leaves = [out[k] for k in flat]
+                return jax.tree_util.tree_unflatten(treedef, leaves), s
+            return None, None
+        except FileNotFoundError:
+            return None, None

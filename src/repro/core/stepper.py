@@ -58,6 +58,21 @@ class OceanConfig:
                                    # (core/horizontal.py); False keeps the
                                    # seed per-call path (equivalence oracle)
 
+    def with_recovery(self, dt_factor: float = 0.5,
+                      visc_factor: float = 1.0) -> "OceanConfig":
+        """Degraded-mode config for the recovery ladder
+        (``runtime/fault_tolerance.SimulationRunner``).
+
+        Scales the internal step ``dt`` by ``dt_factor``; ``m_2d`` is kept,
+        so the external sub-step ``dt_2d = dt/m_2d`` scales consistently and
+        every CFL number shrinks by the same factor.  ``visc_factor > 1``
+        additionally bumps the background vertical mixing (extra damping
+        while riding out a blow-up)."""
+        return dataclasses.replace(
+            self, dt=self.dt * dt_factor,
+            nu_v_bg=self.nu_v_bg * visc_factor,
+            kappa_v_bg=self.kappa_v_bg * visc_factor)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)

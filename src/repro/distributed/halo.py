@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from . import partition as part
 from ..obs import metrics as _metrics
+from ..runtime import chaos as _chaos
 
 
 @jax.tree_util.register_dataclass
@@ -61,6 +62,10 @@ def exchange(x: jax.Array, t: HaloTables) -> jax.Array:
             reg.counter("halo.bytes").inc(buf.size * buf.dtype.itemsize)
             perm = [(i, (i + off) % P) for i in range(P)]
             rbuf = jax.lax.ppermute(buf, t.axes, perm)
+            # chaos site: corrupt the received payload (fires at TRACE time,
+            # so an armed halo fault is baked into the compiled program —
+            # the diagnostics layer must catch it downstream)
+            rbuf = _chaos.site("halo.payload", rbuf, offset=off)
             x = x.at[..., ridx].set(rbuf)
     return x
 
